@@ -1,0 +1,32 @@
+"""Shared benchmark plumbing: reduced-budget problem setup + CSV output."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (CASES, Evaluator, PhvContext, SystemSpec,
+                        spec_16, spec_36, spec_64, spec_tiny, traffic_matrix)
+from repro.core.local_search import SearchHistory
+
+
+def problem(spec: SystemSpec, app: str, case: str):
+    f = traffic_matrix(spec, app)
+    ev = Evaluator(spec, f)
+    mesh = spec.mesh_design()
+    ctx = PhvContext(ev(mesh), CASES[case])
+    return ev, ctx, mesh
+
+
+def row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

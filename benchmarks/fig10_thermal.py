@@ -1,0 +1,37 @@
+"""Fig. 10 — performance-thermal trade-offs: NoCs optimized for network
+efficiency only (Case 3), thermal only (Case 4), and jointly (Case 5),
+compared on latency, EDP, and peak temperature (paper: joint recovers
+~18 degC at ~2.3% performance cost)."""
+
+from __future__ import annotations
+
+from repro.core import spec_16, spec_36
+from repro.core.agnostic import OptimizeBudget, thermal_study
+
+from .common import Timer, row
+
+
+def main(reduced: bool = False) -> None:
+    # Always the 36-tile system: on 2-layer minis every placement pins the
+    # same worst GPU stack (pigeonhole), so peak degC cannot discriminate.
+    spec = spec_36()
+    budget = OptimizeBudget(iters_max=2 if reduced else 4,
+                            n_swaps=10, n_link_moves=10,
+                            max_local_steps=15 if reduced else 40)
+    with Timer() as t:
+        res = thermal_study(spec, "BFS", budget)
+    perf, therm, joint = res["case3"], res["case4"], res["case5"]
+    row("fig10", t.dt * 1e6,
+        f"perf_edp={perf['edp']:.2f};joint_edp={joint['edp']:.2f};"
+        f"therm_edp={therm['edp']:.2f};"
+        f"perf_T={perf['peak_celsius']:.1f}C;"
+        f"joint_T={joint['peak_celsius']:.1f}C;"
+        f"therm_T={therm['peak_celsius']:.1f}C;"
+        f"Tmetric_perf/therm={perf['temp_metric']/therm['temp_metric']:.2f};"
+        f"Tmetric_joint/therm={joint['temp_metric']/therm['temp_metric']:.2f};"
+        f"joint_recovers={perf['peak_celsius']-joint['peak_celsius']:.1f}C;"
+        f"joint_edp_cost={(joint['edp']/perf['edp']-1)*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

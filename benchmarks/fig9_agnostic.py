@@ -1,0 +1,38 @@
+"""Figs. 9 & 11 — application-agnostic NoC design.
+
+Every application's NoC is cross-evaluated on every other application and
+on the leave-one-out AVG NoC; normalized EDP degradation is the paper's
+headline number (64-tile: 3.2% avg single-app, 1.1% AVG; 36-tile: 3.8% /
+1.8%; Fig. 11 repeats this under joint perf-thermal objectives)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import APP_NAMES, spec_16, spec_36
+from repro.core.agnostic import OptimizeBudget, run_agnostic_study, summarize
+
+from .common import Timer, row
+
+
+def main(reduced: bool = False) -> None:
+    spec = spec_16() if reduced else spec_36()
+    apps = APP_NAMES[:4] if reduced else APP_NAMES
+    budget = OptimizeBudget(
+        iters_max=2 if reduced else 4,
+        n_swaps=10, n_link_moves=10,
+        max_local_steps=12 if reduced else 40,
+    )
+    for case, tag in (("case3", "fig9_perf"), ("case5", "fig11_joint")):
+        with Timer() as t:
+            res = run_agnostic_study(spec, apps, case, budget)
+        s = summarize(res)
+        row(tag, t.dt / len(apps) * 1e6,
+            f"single_app_avg_deg={s['app_specific_avg_degradation']*100:.1f}%;"
+            f"single_app_worst={s['app_specific_worst_degradation']*100:.1f}%;"
+            f"avg_noc_deg={s['avg_noc_degradation']*100:.1f}%;"
+            f"avg_noc_worst={s['avg_noc_worst']*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

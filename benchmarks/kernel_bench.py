@@ -1,0 +1,40 @@
+"""Framework-side microbenchmarks: batched design evaluation throughput
+(the optimizer's hot loop the Pallas kernels target), PHV computation, and
+the flit simulator. On this CPU container the jnp reference paths execute;
+the same entry points run the Pallas kernels on TPU."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Evaluator, hypervolume, random_design, spec_36, spec_64, traffic_matrix
+from repro.core import netsim
+
+from .common import Timer, row
+
+
+def main(reduced: bool = False) -> None:
+    spec = spec_36() if reduced else spec_64()
+    f = traffic_matrix(spec, "BFS")
+    ev = Evaluator(spec, f)
+    rng = np.random.default_rng(0)
+    designs = [random_design(spec, rng) for _ in range(64)]
+    ev.batch(designs[:8])  # warm compile
+    with Timer() as t:
+        ev.batch(designs)
+    row("eval_batch64", t.dt / 64 * 1e6, f"designs_per_s={64/t.dt:.1f}")
+
+    pts = rng.uniform(size=(24, 4))
+    with Timer() as t:
+        for _ in range(50):
+            hypervolume(pts, np.full(4, 1.5))
+    row("phv_24pts_4obj", t.dt / 50 * 1e6, "hso_recursive")
+
+    d = spec.mesh_design()
+    with Timer() as t:
+        netsim.simulate(spec, d, f, cycles=1000, warmup=200)
+    row("netsim_1kcycles", t.dt * 1e6, f"cycles_per_s={1000/t.dt:.0f}")
+
+
+if __name__ == "__main__":
+    main()

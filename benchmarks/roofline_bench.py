@@ -1,0 +1,44 @@
+"""Roofline excerpts for the benchmark run: re-derives the three roofline
+terms for two representative cells via subprocess (the 512-device dry-run
+environment must not leak into this process's JAX). Full tables:
+``python -m repro.launch.roofline --all`` and EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import Timer, row
+
+CELLS = [("whisper-base", "train_4k"), ("gemma3-1b", "decode_32k")]
+
+
+def main(reduced: bool = False) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    for arch, shape in CELLS:
+        with Timer() as t:
+            proc = subprocess.run(
+                [sys.executable, "-m", "repro.launch.roofline",
+                 "--arch", arch, "--shape", shape],
+                capture_output=True, text=True, env=env, timeout=900,
+            )
+        ok = proc.returncode == 0
+        path = os.path.join("experiments", "roofline",
+                            f"{arch}__{shape}__pod16x16.json")
+        detail = "FAILED"
+        if ok and os.path.exists(path):
+            with open(path) as fh:
+                c = json.load(fh)
+            detail = (f"dominant={c['dominant']};"
+                      f"compute_s={c['compute_s']:.2e};"
+                      f"memory_s={c['memory_s']:.2e};"
+                      f"collective_s={c['collective_s']:.2e};"
+                      f"roofline_frac={c['roofline_fraction']:.2f}")
+        row(f"roofline_{arch}_{shape}", t.dt * 1e6, detail)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark aggregator — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV. Reduced budgets keep the full
+suite tractable on the CPU container; each module's main() accepts
+reduced=False for the full-budget variants reported in EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    reduced = "--full" not in sys.argv
+    print(f"# repro benchmarks (reduced={reduced})")
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+
+    from . import (fig4_throughput_model, fig6_convergence, fig8_eval_error,
+                   fig9_agnostic, fig10_thermal, kernel_bench,
+                   roofline_bench, table2_speedup)
+
+    for mod in (kernel_bench, fig4_throughput_model, fig6_convergence,
+                table2_speedup, fig8_eval_error, fig9_agnostic,
+                fig10_thermal, roofline_bench):
+        name = mod.__name__.rsplit(".", 1)[-1]
+        t = time.perf_counter()
+        try:
+            mod.main(reduced=reduced)
+        except Exception as e:  # pragma: no cover — keep the suite running
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+        print(f"# {name} took {time.perf_counter()-t:.1f}s", flush=True)
+
+    print(f"# total {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

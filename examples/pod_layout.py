@@ -1,0 +1,76 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Pod-level bridge demo: MOO-STAGE places logical devices on the ICI torus.
+
+1. Lower + compile gemma3-1b train_4k on the 16x16 production mesh.
+2. Read the collective schedule off the compiled HLO -> logical-device
+   traffic matrix (the pod's 'gem5 trace').
+3. Optimize the placement permutation with MOO-STAGE (same objectives as
+   the paper's Eqs. 2-4 over ICI links) from a RANDOM start, and compare
+   identity / random / optimized layouts.
+4. Architecture-agnostic check (paper §6.4 analogue): the layout optimized
+   on one arch's traffic is evaluated on another arch's traffic.
+
+    PYTHONPATH=src python examples/pod_layout.py
+"""
+
+import numpy as np
+
+from repro.dist import sharding as shd
+from repro.dist.mesh_layout import (LayoutEvaluator, Torus,
+                                    collective_traffic, optimize_layout)
+from repro.launch.dryrun import build_lowered
+from repro.launch.mesh import make_production_mesh
+
+
+def traffic_for(arch: str, shape: str = "train_4k") -> np.ndarray:
+    mesh = make_production_mesh(multi_pod=False)
+    policy = shd.default_policy_for("train")
+    lowered, _ = build_lowered(arch, shape, mesh, policy)
+    text = lowered.compile().as_text()
+    f = collective_traffic(text, 256)
+    print(f"  {arch}: {np.count_nonzero(f)} communicating pairs, "
+          f"{f.sum()/1e9:.2f} GB ring traffic")
+    return f
+
+
+def main():
+    t = Torus(16, 16)
+    print("extracting collective traffic from compiled HLO...")
+    f_gemma = traffic_for("gemma3-1b")
+    ev = LayoutEvaluator(t, f_gemma)
+
+    ident = np.arange(256)
+    o_ident = ev(ident)
+    rng = np.random.default_rng(0)
+    rand = rng.permutation(256)
+    o_rand = ev(rand)
+    print(f"identity layout: max-link {o_ident[2]/1e6:.1f} MB, "
+          f"avg hops {o_ident[3]:.2f}")
+    print(f"random layout:   max-link {o_rand[2]/1e6:.1f} MB, "
+          f"avg hops {o_rand[3]:.2f}")
+
+    print("MOO-STAGE layout search (from random start)...")
+    res = optimize_layout(ev, seed=0, iters_max=4, n_neighbors=32,
+                          max_steps=40)
+    o_opt = res.best_objs
+    print(f"optimized layout: max-link {o_opt[2]/1e6:.1f} MB, "
+          f"avg hops {o_opt[3]:.2f} "
+          f"({(1-o_opt[2]/o_rand[2])*100:.0f}% below random start)")
+
+    # Architecture-agnostic: evaluate gemma-optimized layout on yi traffic.
+    f_yi = traffic_for("yi-6b")
+    ev_yi = LayoutEvaluator(t, f_yi)
+    cross = ev_yi(res.best_perm)
+    own = optimize_layout(ev_yi, seed=0, iters_max=3, n_neighbors=32,
+                          max_steps=30).best_objs
+    deg = (cross[2] / own[2] - 1) * 100
+    print(f"arch-agnostic check: gemma-optimized layout on yi-6b traffic: "
+          f"max-link within {deg:.1f}% of yi-specific layout")
+    print("(the paper's application-agnostic claim, at pod scale: collective"
+          " traffic is architecture-dominated, so layouts transfer)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: design a 3D heterogeneous NoC with MOO-STAGE (the paper's
+core loop, container-sized).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (CASES, Evaluator, PhvContext, spec_16, spec_36,
+                        traffic_matrix)
+from repro.core import netsim
+from repro.core.objectives import OBJ_NAMES
+from repro.core.stage import moo_stage
+
+
+def main():
+    spec = spec_36()  # 36 tiles: 4 CPUs, 8 LLCs, 24 GPUs, four 3x3 layers
+    f = traffic_matrix(spec, "BFS")
+    ev = Evaluator(spec, f)
+    mesh = spec.mesh_design()
+    mesh_objs = ev(mesh)
+    ctx = PhvContext(mesh_objs, CASES["case3"])  # {U, sigma, Lat, E}
+
+    print("3D-mesh baseline:",
+          {n: round(float(v), 4) for n, v in zip(OBJ_NAMES, mesh_objs)})
+
+    res = moo_stage(spec, ev, ctx, mesh, seed=0, iters_max=4,
+                    n_swaps=16, n_link_moves=16, max_local_steps=40)
+    objs = res.global_set.objs
+    edps = objs[:, 2] * objs[:, 3]
+    best = int(np.argmin(edps))
+    d = res.global_set.designs[best]
+
+    print(f"MOO-STAGE explored {ev.n_evals} designs, Pareto set size "
+          f"{len(res.global_set.designs)}")
+    print("best-EDP design:",
+          {n: round(float(v), 4) for n, v in zip(OBJ_NAMES, objs[best])})
+    print(f"EDP: mesh {ev.edp(mesh):.2f} -> optimized {ev.edp(d):.2f} "
+          f"({(1 - ev.edp(d)/ev.edp(mesh))*100:.1f}% better)")
+
+    # Paper Fig. 7-style structure: links/layer + LLC placement depth.
+    layer = spec.layer_of_slot
+    iu = np.triu_indices(spec.n_tiles, 1)
+    links_per_layer = np.bincount(layer[iu[0]][d.adj[iu]],
+                                  minlength=spec.n_layers)
+    llc_layers = layer[np.isin(d.perm, np.arange(spec.n_cpu,
+                                                 spec.n_cpu + spec.n_llc))]
+    print("links per layer (sink first):", links_per_layer.tolist())
+    print("LLC tiles per layer:",
+          np.bincount(llc_layers, minlength=spec.n_layers).tolist())
+
+    st_mesh = netsim.saturation_throughput(spec, mesh, f, cycles=1500)
+    st_best = netsim.saturation_throughput(spec, d, f, cycles=1500)
+    print(f"flit-sim saturation throughput: mesh {st_mesh:.2f} -> "
+          f"optimized {st_best:.2f} flits/cycle")
+
+
+if __name__ == "__main__":
+    main()

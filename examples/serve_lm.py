@@ -1,0 +1,47 @@
+"""Batched serving demo: prefill a batch of prompts through a small
+yi-6b-family model and greedily decode continuations with the KV-cache
+engine (the same decode_step the decode_32k/long_500k dry-run cells lower).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models import build
+from repro.serve import Engine, ServeConfig
+
+
+def main():
+    cfg = get_config("yi-6b", smoke=True).scaled(
+        n_layers=4, d_model=256, n_heads=8, n_kv_heads=2, head_dim=32,
+        d_ff=1024, vocab=4096, compute_dtype=jnp.float32, remat=False)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_host_mesh()
+    engine = Engine(model, mesh, shd.Policy(), params,
+                    ServeConfig(max_new_tokens=24, max_len=128))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab, size=(8, 16)).astype(np.int32)
+    t0 = time.perf_counter()
+    out = engine.generate(prompts)
+    dt = time.perf_counter() - t0
+    total_new = out.size
+    print(f"batch {prompts.shape[0]}, prompt len {prompts.shape[1]}, "
+          f"{out.shape[1]} new tokens each")
+    print(f"first continuation: {out[0].tolist()}")
+    print(f"throughput: {total_new/dt:.1f} tok/s on {jax.devices()[0].platform}")
+    # Determinism check (greedy): same prompts -> same tokens.
+    assert np.array_equal(out, engine.generate(prompts))
+    print("greedy decode deterministic: OK")
+
+
+if __name__ == "__main__":
+    main()

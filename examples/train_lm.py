@@ -1,0 +1,70 @@
+"""End-to-end training driver: a ~100M-parameter gemma3-family model on the
+synthetic bigram corpus, with checkpointing/restart and the full sharded
+train step (the same code path the multi-pod dry-run lowers).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300     # full demo
+    PYTHONPATH=src python examples/train_lm.py --steps 20 --tiny  # quick
+
+On the CPU container a ~100M model runs ~1 step/s at the default sizes;
+--tiny drops to a ~10M model for smoke runs. Kill it at any point and rerun:
+it resumes from the latest atomic checkpoint.
+"""
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models import build
+from repro.train import OptConfig, TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    base = get_config("gemma3-1b")
+    if args.tiny:
+        cfg = base.scaled(n_layers=4, d_model=256, n_heads=4, n_kv_heads=1,
+                          head_dim=64, d_ff=1024, vocab=2048,
+                          sliding_window=128, compute_dtype=jnp.float32)
+    else:
+        # ~100M params: 8L x 512d, 32k vocab (tied embeddings).
+        cfg = base.scaled(n_layers=8, d_model=512, n_heads=8, n_kv_heads=2,
+                          head_dim=64, d_ff=2048, vocab=32768,
+                          sliding_window=256, compute_dtype=jnp.float32)
+    from repro.models.common import ModelConfig  # noqa: F401 (docs)
+    model = build(cfg)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}-style, {n_params/1e6:.1f}M params")
+
+    mesh = make_host_mesh()
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=512,
+                                  global_batch=4, seed=0))
+    print(f"synthetic-bigram entropy floor: {data.entropy_floor():.3f} nats")
+
+    trainer = Trainer(
+        model, mesh, shd.Policy(microbatches=1),
+        OptConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps,
+                  weight_decay=0.01),
+        data,
+        TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=50),
+    )
+    out = trainer.run()
+    losses = out["losses"]
+    print(f"step {losses[0][0]} loss {losses[0][1]:.3f}  ->  "
+          f"step {losses[-1][0]} loss {losses[-1][1]:.3f} "
+          f"(floor {data.entropy_floor():.3f})")
+    if out["straggler_events"]:
+        print("straggler events:", out["straggler_events"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""The 10 assigned architectures (exact public configs), the 4 input shapes,
+and input_specs() ShapeDtypeStruct builders for the dry-run."""
+
+from .registry import (ARCH_NAMES, SHAPES, applicable, cell_status,
+                       get_config, input_specs)
+from .shapes import Shape
+
+__all__ = ["ARCH_NAMES", "SHAPES", "Shape", "applicable", "cell_status",
+           "get_config", "input_specs"]

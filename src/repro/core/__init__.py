@@ -1,0 +1,25 @@
+"""The paper's primary contribution: MOO-STAGE and the 3D heterogeneous NoC
+design problem (objectives Eqs. 1-10, Algorithms 1-2), plus the AMOSA /
+PCBB / NSGA-II baselines, the traffic study (§3) and the application-
+agnostic design experiments (§6.4-6.5).
+
+The same optimizer is re-targeted at pod-scale problems in repro.dist
+(device layout on the ICI torus, sharding-policy auto-search)."""
+
+from .evaluate import Evaluator
+from .local_search import ParetoSet, SearchHistory, local_search
+from .objectives import CASES, N_OBJ, OBJ_NAMES
+from .pareto import PhvContext, dominates, hypervolume, pareto_filter, pareto_mask
+from .problem import (CPU, GPU, LLC, Design, SystemSpec, random_design,
+                      sample_neighbors, spec_16, spec_36, spec_64, spec_tiny)
+from .stage import StageResult, moo_stage
+from .traffic import APP_NAMES, APPLICATIONS, avg_traffic, traffic_matrix
+
+__all__ = [
+    "APP_NAMES", "APPLICATIONS", "CASES", "CPU", "Design", "Evaluator", "GPU",
+    "LLC", "N_OBJ", "OBJ_NAMES", "ParetoSet", "PhvContext", "SearchHistory",
+    "StageResult", "SystemSpec", "avg_traffic", "dominates", "hypervolume",
+    "local_search", "moo_stage", "pareto_filter", "pareto_mask",
+    "random_design", "sample_neighbors", "spec_16", "spec_36", "spec_64",
+    "spec_tiny", "traffic_matrix",
+]

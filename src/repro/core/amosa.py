@@ -1,0 +1,111 @@
+"""AMOSA — Archived Multi-Objective Simulated Annealing (Bandyopadhyay et
+al. [10]), the paper's primary baseline (§6.1).
+
+Implements the standard acceptance logic based on the *amount of domination*
+
+    Δdom(a, b) = Π_{i: f_i differs}  |f_i(a) - f_i(b)| / R_i
+
+(objectives normalized by the PHV context so R_i is the mesh-design scale),
+with an archive kept non-dominated and thinned to the hard limit by
+crowding-distance when it exceeds the soft limit (stand-in for AMOSA's
+clustering step; noted in DESIGN.md §5)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .evaluate import Evaluator
+from .local_search import ParetoSet, SearchHistory
+from .pareto import PhvContext, dominates, pareto_mask
+from .problem import Design, SystemSpec, sample_neighbors
+
+
+def _delta_dom(a: np.ndarray, b: np.ndarray) -> float:
+    d = np.abs(a - b)
+    d = d[d > 1e-15]
+    return float(np.prod(d)) if d.size else 0.0
+
+
+def _crowding_thin(objs: np.ndarray, keep: int) -> np.ndarray:
+    """Indices of `keep` rows with largest crowding distance."""
+    n, m = objs.shape
+    if n <= keep:
+        return np.arange(n)
+    crowd = np.zeros(n)
+    for j in range(m):
+        order = np.argsort(objs[:, j], kind="stable")
+        rng_j = objs[order[-1], j] - objs[order[0], j] + 1e-12
+        crowd[order[0]] = crowd[order[-1]] = np.inf
+        crowd[order[1:-1]] += (objs[order[2:], j] - objs[order[:-2], j]) / rng_j
+    return np.argsort(-crowd, kind="stable")[:keep]
+
+
+def amosa(
+    spec: SystemSpec,
+    ev: Evaluator,
+    ctx: PhvContext,
+    d0: Design,
+    seed: int = 0,
+    *,
+    t_max: float = 1.0,
+    t_min: float = 1e-4,
+    alpha: float = 0.92,
+    iters_per_temp: int = 40,
+    soft_limit: int = 40,
+    hard_limit: int = 24,
+    max_evals: int | None = None,
+    history: SearchHistory | None = None,
+) -> ParetoSet:
+    rng = np.random.default_rng(seed)
+    history = history or SearchHistory(ev, ctx)
+
+    cur = d0
+    cur_obj = ev(cur)
+    history.record(ev, cur, cur_obj)
+    archive = ParetoSet.empty().merged_with([cur], cur_obj[None], ctx.obj_idx)
+
+    temp = t_max
+    while temp > t_min:
+        for _ in range(iters_per_temp):
+            if max_evals is not None and ev.n_evals >= max_evals:
+                return archive
+            cands = sample_neighbors(spec, cur, rng, 1, 1)
+            if not cands:
+                continue
+            new = cands[rng.integers(len(cands))]
+            new_obj = ev(new)
+            history.record(ev, new, new_obj)
+
+            a_n = ctx.normalize(new_obj)
+            a_c = ctx.normalize(cur_obj)
+            arch_n = ctx.normalize(archive.objs)
+
+            dom_new_by = [
+                i for i in range(arch_n.shape[0]) if dominates(arch_n[i], a_n)
+            ]
+            if dominates(a_c, a_n):
+                # Case 1: current dominates new — probabilistic acceptance.
+                ddoms = [_delta_dom(arch_n[i], a_n) for i in dom_new_by]
+                ddoms.append(_delta_dom(a_c, a_n))
+                davg = float(np.mean(ddoms))
+                if rng.random() < 1.0 / (1.0 + np.exp(min(davg / max(temp, 1e-9), 50.0))):
+                    cur, cur_obj = new, new_obj
+            elif dom_new_by:
+                # Case 2a: new dominated by archive points.
+                davg = float(np.mean([_delta_dom(arch_n[i], a_n) for i in dom_new_by]))
+                if rng.random() < 1.0 / (1.0 + np.exp(min(davg / max(temp, 1e-9), 50.0))):
+                    cur, cur_obj = new, new_obj
+            else:
+                # Case 2b/3: new is non-dominated w.r.t. archive (it may
+                # dominate some archive members) — accept and archive it.
+                cur, cur_obj = new, new_obj
+                archive = archive.merged_with([new], new_obj[None], ctx.obj_idx)
+                if len(archive.designs) > soft_limit:
+                    keep = _crowding_thin(
+                        ctx.normalize(archive.objs), hard_limit
+                    )
+                    archive = ParetoSet(
+                        [archive.designs[i] for i in keep], archive.objs[keep]
+                    )
+        temp *= alpha
+    return archive

@@ -1,0 +1,63 @@
+"""Batched design evaluation — the optimizer's compute hot loop.
+
+The paper evaluates candidates one at a time on a Xeon; we reformulate the
+whole objective stack (routing + Eqs. 1-10) as a fixed-shape JAX program and
+evaluate entire neighborhoods in one jitted, vmapped batch (DESIGN.md §4).
+On TPU the two inner hot spots can be served by Pallas kernels
+(kernels/minplus, kernels/link_util); the jnp path is the reference and the
+CPU execution path.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .objectives import N_OBJ, SpecConsts, evaluate_design, make_consts
+from .problem import Design, SystemSpec
+
+
+class Evaluator:
+    """Jitted batched evaluator for a fixed (spec, traffic) pair.
+
+    Batches are padded to the next power of two to bound recompiles."""
+
+    def __init__(self, spec: SystemSpec, f: np.ndarray):
+        self.spec = spec
+        self.consts: SpecConsts = make_consts(spec)
+        self.f = jnp.asarray(f, jnp.float32)
+        self._batched = jax.jit(
+            jax.vmap(partial(evaluate_design, self.consts), in_axes=(0, 0, None))
+        )
+        self.n_evals = 0  # evaluation counter (search-cost accounting)
+
+    # ------------------------------------------------------------- single
+    def __call__(self, d: Design) -> np.ndarray:
+        return self.batch([d])[0]
+
+    # -------------------------------------------------------------- batch
+    def batch(self, designs: list[Design]) -> np.ndarray:
+        """(B, 5) objective rows; invalid designs come back as +INF rows."""
+        return self.batch_aux(designs)[0]
+
+    def batch_aux(self, designs: list[Design]) -> tuple[np.ndarray, dict]:
+        if not designs:
+            return np.zeros((0, N_OBJ)), {"net_lat": np.zeros((0,))}
+        b = len(designs)
+        pad = 1 << max(0, (b - 1).bit_length())
+        perms = np.stack([d.perm for d in designs] + [designs[-1].perm] * (pad - b))
+        adjs = np.stack([d.adj for d in designs] + [designs[-1].adj] * (pad - b))
+        objs, aux = self._batched(jnp.asarray(perms), jnp.asarray(adjs), self.f)
+        self.n_evals += b
+        aux = {k: np.asarray(v[:b]) for k, v in aux.items()}
+        return np.asarray(objs[:b], dtype=np.float64), aux
+
+    # ---------------------------------------------------------------- EDP
+    def edp(self, d: Design) -> float:
+        """Network EDP = network latency x network energy (paper §6.1; the
+        analytic variant — core/netsim.py provides the simulated one)."""
+        objs, aux = self.batch_aux([d])
+        return float(aux["net_lat"][0] * objs[0, 3])

@@ -1,0 +1,83 @@
+"""Cheap structural design features for the STAGE evaluation function.
+
+STAGE's Eval must be much cheaper than a local search (paper §5.2), so the
+features are O(N^2) numpy reads of the design itself — no routing, no
+objective evaluation:
+
+  geometry of the placement (where each core class sits, depth from sink),
+  link structure (per-layer counts, lengths, degrees), and
+  proximity structure between communicating classes (CPU/GPU vs LLC).
+
+These are exactly the quantities the paper's qualitative analysis (§6.3,
+Fig. 7/12: "LLCs in middle layers", "links concentrate near LLCs") says
+predict design quality.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .problem import CPU, GPU, LLC, Design, SystemSpec
+
+FEATURE_NAMES = (
+    "llc_mean_layer", "llc_std_layer", "cpu_mean_layer", "gpu_mean_layer",
+    "power_depth", "col_power_std",
+    "links_layer_entropy", "link_len_mean", "link_len_std",
+    "deg_mean", "deg_std", "deg_max",
+    "llc_deg_mean", "cpu_llc_dist", "gpu_llc_dist", "llc_link_frac",
+)
+
+
+def design_features(spec: SystemSpec, d: Design) -> np.ndarray:
+    """(F,) float feature vector — see FEATURE_NAMES."""
+    coords = spec.coords
+    layer = coords[:, 0].astype(np.float64)
+    types = spec.core_types[d.perm]
+    power = spec.core_power[d.perm]
+    k = spec.n_layers
+
+    is_cpu, is_llc, is_gpu = types == CPU, types == LLC, types == GPU
+
+    # Placement geometry.
+    llc_mean_layer = layer[is_llc].mean() / k
+    llc_std_layer = layer[is_llc].std() / k
+    cpu_mean_layer = layer[is_cpu].mean() / k
+    gpu_mean_layer = layer[is_gpu].mean() / k
+    power_depth = float((power * layer).sum() / (power.sum() * k))
+    col = coords[:, 1] * spec.ny + coords[:, 2]
+    col_power = np.bincount(col, weights=power, minlength=spec.tiles_per_layer)
+    col_power_std = float(col_power.std() / (col_power.mean() + 1e-9))
+
+    # Link structure.
+    iu = np.triu_indices(spec.n_tiles, 1)
+    link_mask = d.adj[iu]
+    link_layers = layer[iu[0]][link_mask]
+    counts = np.bincount(link_layers.astype(int), minlength=k).astype(np.float64)
+    p = counts / counts.sum()
+    links_layer_entropy = float(-(p * np.log(p + 1e-12)).sum() / np.log(k))
+    lens = spec.manhattan[iu][link_mask]
+    link_len_mean = float(lens.mean())
+    link_len_std = float(lens.std())
+    full = d.adj | spec.vertical_adj
+    deg = full.sum(1).astype(np.float64)
+    llc_deg_mean = float(deg[is_llc].mean())
+
+    # Class-proximity (geometric stand-in for routed hop distance).
+    man = spec.manhattan + 1.0 * np.abs(layer[:, None] - layer[None, :])
+    def class_dist(a, b):
+        return float(man[np.ix_(a, b)].mean())
+    cpu_llc = class_dist(np.flatnonzero(is_cpu), np.flatnonzero(is_llc))
+    gpu_llc = class_dist(np.flatnonzero(is_gpu), np.flatnonzero(is_llc))
+
+    # Fraction of planar links with an LLC endpoint (paper Fig. 7 insight).
+    llc_slots = is_llc
+    ends_llc = llc_slots[iu[0]] | llc_slots[iu[1]]
+    llc_link_frac = float((ends_llc & link_mask).sum() / max(link_mask.sum(), 1))
+
+    return np.array([
+        llc_mean_layer, llc_std_layer, cpu_mean_layer, gpu_mean_layer,
+        power_depth, col_power_std,
+        links_layer_entropy, link_len_mean, link_len_std,
+        float(deg.mean()), float(deg.std()), float(deg.max()),
+        llc_deg_mean, cpu_llc, gpu_llc, llc_link_frac,
+    ])

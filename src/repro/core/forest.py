@@ -1,0 +1,109 @@
+"""Regression forest (bagged CART) — the paper's base learner for Eval.
+
+sklearn is unavailable offline; this is a compact numpy implementation. The
+paper notes any quick, sufficiently expressive regressor works (§5.2).
+Trees use variance-reduction splits, bootstrap bagging, and per-split
+feature subsampling.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Tree:
+    __slots__ = ("feature", "threshold", "left", "right", "value")
+
+    def __init__(self):
+        self.feature = -1
+        self.threshold = 0.0
+        self.left = None
+        self.right = None
+        self.value = 0.0
+
+
+def _build(x, y, rng, depth, max_depth, min_leaf, n_feat_try):
+    node = _Tree()
+    node.value = float(y.mean())
+    if depth >= max_depth or y.shape[0] < 2 * min_leaf or np.ptp(y) < 1e-12:
+        return node
+    n, f = x.shape
+    best = (None, None, np.inf)
+    for feat in rng.choice(f, size=min(n_feat_try, f), replace=False):
+        xs = x[:, feat]
+        order = np.argsort(xs, kind="stable")
+        xs_s, y_s = xs[order], y[order]
+        # candidate split points between distinct neighbor values
+        csum = np.cumsum(y_s)
+        csq = np.cumsum(y_s**2)
+        tot, tot2 = csum[-1], csq[-1]
+        idx = np.arange(min_leaf, n - min_leaf)
+        if idx.size == 0:
+            continue
+        valid = xs_s[idx] < xs_s[idx + 1] - 1e-15
+        idx = idx[valid]
+        if idx.size == 0:
+            continue
+        nl = idx + 1.0
+        nr = n - nl
+        sse = (csq[idx] - csum[idx] ** 2 / nl) + (
+            (tot2 - csq[idx]) - (tot - csum[idx]) ** 2 / nr
+        )
+        j = int(np.argmin(sse))
+        if sse[j] < best[2]:
+            thr = 0.5 * (xs_s[idx[j]] + xs_s[idx[j] + 1])
+            best = (int(feat), float(thr), float(sse[j]))
+    if best[0] is None:
+        return node
+    node.feature, node.threshold = best[0], best[1]
+    mask = x[:, node.feature] <= node.threshold
+    node.left = _build(x[mask], y[mask], rng, depth + 1, max_depth, min_leaf, n_feat_try)
+    node.right = _build(x[~mask], y[~mask], rng, depth + 1, max_depth, min_leaf, n_feat_try)
+    return node
+
+
+def _predict_tree(node: _Tree, x: np.ndarray) -> np.ndarray:
+    out = np.empty(x.shape[0])
+    stack = [(node, np.arange(x.shape[0]))]
+    while stack:
+        nd, idx = stack.pop()
+        if nd.left is None:
+            out[idx] = nd.value
+            continue
+        mask = x[idx, nd.feature] <= nd.threshold
+        stack.append((nd.left, idx[mask]))
+        stack.append((nd.right, idx[~mask]))
+    return out
+
+
+class RegressionForest:
+    def __init__(self, n_trees: int = 24, max_depth: int = 9,
+                 min_leaf: int = 3, seed: int = 0):
+        self.n_trees = n_trees
+        self.max_depth = max_depth
+        self.min_leaf = min_leaf
+        self.rng = np.random.default_rng(seed)
+        self.trees: list[_Tree] = []
+        self._xm = self._xs = None
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "RegressionForest":
+        x = np.asarray(x, np.float64)
+        y = np.asarray(y, np.float64)
+        self._xm = x.mean(0)
+        self._xs = x.std(0) + 1e-9
+        xn = (x - self._xm) / self._xs
+        n = x.shape[0]
+        n_feat_try = max(1, int(np.ceil(np.sqrt(x.shape[1]))) + 1)
+        self.trees = []
+        for _ in range(self.n_trees):
+            idx = self.rng.integers(0, n, size=n)
+            self.trees.append(
+                _build(xn[idx], y[idx], self.rng, 0, self.max_depth,
+                       self.min_leaf, n_feat_try)
+            )
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        x = np.atleast_2d(np.asarray(x, np.float64))
+        xn = (x - self._xm) / self._xs
+        return np.mean([_predict_tree(t, xn) for t in self.trees], axis=0)

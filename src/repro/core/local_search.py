@@ -1,0 +1,144 @@
+"""Algorithm 1 — PHV-greedy local search.
+
+From a starting design, repeatedly evaluate a (sampled) neighborhood in one
+batched JAX call, move to the neighbor maximizing PHV(S_local ∪ {d}), and
+stop when the best neighbor no longer improves the PHV. Returns the local
+non-dominated set, the search trajectory, and the last design (Alg. 1's
+(S_local, S_traj, d_last))."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .evaluate import Evaluator
+from .pareto import PhvContext, pareto_mask
+from .problem import Design, SystemSpec, sample_neighbors
+
+
+@dataclasses.dataclass
+class ParetoSet:
+    """A set of designs + their (full 5-dim) objective rows, non-dominated
+    under the active objective subset."""
+
+    designs: list[Design]
+    objs: np.ndarray  # (n, 5)
+
+    @staticmethod
+    def empty() -> "ParetoSet":
+        return ParetoSet([], np.zeros((0, 5)))
+
+    def sub(self, obj_idx) -> np.ndarray:
+        return self.objs[:, list(obj_idx)] if len(self.designs) else self.objs
+
+    def merged_with(self, designs: list[Design], objs: np.ndarray,
+                    obj_idx) -> "ParetoSet":
+        alld = self.designs + list(designs)
+        allo = np.vstack([self.objs, np.atleast_2d(objs)]) if alld else self.objs
+        mask = pareto_mask(allo[:, list(obj_idx)])
+        return ParetoSet([d for d, m in zip(alld, mask) if m], allo[mask])
+
+    def keys(self) -> set[bytes]:
+        return {d.key() for d in self.designs}
+
+
+@dataclasses.dataclass
+class LocalResult:
+    local: ParetoSet
+    traj: list[Design]
+    traj_objs: np.ndarray
+    d_last: Design
+    phv: float
+    n_steps: int
+
+
+def local_search(
+    spec: SystemSpec,
+    ev: Evaluator,
+    ctx: PhvContext,
+    d_start: Design,
+    rng: np.random.Generator,
+    *,
+    n_swaps: int = 24,
+    n_link_moves: int = 24,
+    max_steps: int = 10_000,
+    max_set: int = 24,
+    history: "SearchHistory | None" = None,
+) -> LocalResult:
+    start_objs = ev(d_start)
+    s_local = ParetoSet.empty().merged_with([d_start], start_objs[None], ctx.obj_idx)
+    traj = [d_start]
+    traj_objs = [start_objs]
+    d_curr = d_start
+    phv_curr = ctx.phv(s_local.objs)
+
+    steps = 0
+    for steps in range(1, max_steps + 1):
+        cands = sample_neighbors(spec, d_curr, rng, n_swaps, n_link_moves)
+        if not cands:
+            break
+        objs = ev.batch(cands)
+        # argmax_d PHV(S_local ∪ {d}) — Alg. 1 line 3.
+        phvs = np.array([ctx.phv_with(s_local.objs, o) for o in objs])
+        j = int(np.argmax(phvs))
+        if phvs[j] <= phv_curr + 1e-12:
+            break
+        d_curr = cands[j]
+        s_local = s_local.merged_with([d_curr], objs[j][None], ctx.obj_idx)
+        if len(s_local.designs) > max_set:
+            # Bound the PHV working set (crowding thinning, as AMOSA bounds
+            # its archive) — HSO cost grows fast with set size.
+            from .amosa import _crowding_thin
+            keep = _crowding_thin(
+                ctx.normalize(s_local.objs), max_set * 2 // 3)
+            s_local = ParetoSet(
+                [s_local.designs[i] for i in keep], s_local.objs[keep])
+        phv_curr = phvs[j]
+        traj.append(d_curr)
+        traj_objs.append(objs[j])
+        if history is not None:
+            history.record(ev, d_curr, objs[j])
+
+    return LocalResult(
+        local=s_local,
+        traj=traj,
+        traj_objs=np.stack(traj_objs),
+        d_last=d_curr,
+        phv=phv_curr,
+        n_steps=steps,
+    )
+
+
+class SearchHistory:
+    """Convergence trace: (wall time, #evaluations, best-so-far EDP, PHV).
+
+    Used by the Fig. 6 / Table 2 benchmarks to compare optimizers on equal
+    footing (both wall-clock and evaluation count). PHV per record is
+    expensive (recursive HSO); it is only computed when ``track_phv``."""
+
+    def __init__(self, ev: Evaluator, ctx: PhvContext,
+                 track_phv: bool = False):
+        self.t0 = time.perf_counter()
+        self.ctx = ctx
+        self.track_phv = track_phv
+        self.rows: list[tuple[float, int, float, float]] = []
+        self.best_edp = np.inf
+        self._pareto_objs = np.zeros((0, 5))
+
+    def record(self, ev: Evaluator, d: Design, objs: np.ndarray):
+        edp = float(objs[2] * objs[3])  # cpu-llc latency x energy (analytic)
+        self.best_edp = min(self.best_edp, edp)
+        phv = np.nan
+        if self.track_phv:
+            self._pareto_objs = np.vstack([self._pareto_objs, objs[None]])
+            mask = pareto_mask(self._pareto_objs[:, list(self.ctx.obj_idx)])
+            self._pareto_objs = self._pareto_objs[mask]
+            phv = self.ctx.phv(self._pareto_objs)
+        self.rows.append(
+            (time.perf_counter() - self.t0, ev.n_evals, self.best_edp, phv)
+        )
+
+    def as_array(self) -> np.ndarray:
+        return np.asarray(self.rows, dtype=np.float64).reshape(-1, 4)

@@ -1,0 +1,130 @@
+"""Flit-level network simulator — the Garnet stand-in (DESIGN.md §5).
+
+Plays the role the paper assigns to cycle-accurate simulation (§4.2.2,
+§6.1): an *independent* measurement of network throughput/latency used to
+(a) validate the Ū/σ link-utilization throughput proxy (Fig. 4) and
+(b) provide the "detailed simulation" latency in network-EDP numbers.
+
+Model: single-flit packets; each directed link forwards 1 flit/cycle;
+per-link FIFO queues; deterministic next-hop routing from core/routing
+(the same tables the analytical objectives use); Bernoulli/Poisson
+injection proportional to the application traffic matrix. Wormhole/VC
+effects are abstracted away — saturation behaviour and relative ordering of
+designs are what matter here, not absolute cycle counts."""
+
+from __future__ import annotations
+
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import routing
+from .objectives import make_consts
+from .problem import Design, SystemSpec
+
+
+def _next_hops(spec: SystemSpec, d: Design) -> np.ndarray:
+    c = make_consts(spec)
+    full_adj = jnp.asarray(d.adj) | c.vadj
+    n = spec.n_tiles
+    cost = jnp.where(full_adj, c.router_stages + c.link_delay, routing.INF)
+    cost = jnp.where(jnp.eye(n, dtype=bool), 0.0, cost)
+    dist, nh = routing.routing_tables(cost, c.apsp_iters)
+    return np.asarray(nh)
+
+
+def simulate(
+    spec: SystemSpec,
+    d: Design,
+    f: np.ndarray,
+    *,
+    perm_traffic: bool = True,
+    inj_scale: float = 1.0,
+    cycles: int = 3000,
+    warmup: int = 500,
+    seed: int = 0,
+) -> dict:
+    """Run the flit simulator; returns throughput (delivered flits/cycle),
+    offered load, mean packet latency, and p99 latency."""
+    rng = np.random.default_rng(seed)
+    n = spec.n_tiles
+    nh = _next_hops(spec, d)
+    fs = f[d.perm][:, d.perm] if perm_traffic else f
+    fs = fs * (1.0 - np.eye(n))
+    rate = fs * inj_scale
+    total_rate = rate.sum()
+
+    # Pre-draw all injections: flit -> (cycle, src, dst).
+    m = rng.poisson(total_rate * cycles)
+    pairs_flat = rng.choice(n * n, size=m, p=(rate / total_rate).ravel())
+    inj_cycle = rng.integers(0, cycles, size=m)
+    order = np.argsort(inj_cycle, kind="stable")
+    pairs_flat, inj_cycle = pairs_flat[order], inj_cycle[order]
+    src_all, dst_all = np.divmod(pairs_flat, n)
+
+    queues: dict[tuple[int, int], deque] = {}
+    full_adj = d.adj | spec.vertical_adj
+    for a in range(n):
+        for b in range(n):
+            if full_adj[a, b]:
+                queues[(a, b)] = deque()
+    edges = list(queues.keys())
+
+    delivered = 0
+    lat_sum = 0.0
+    lats: list[int] = []
+    ptr = 0
+    for t in range(cycles):
+        # 1 flit per link per cycle; each traversal also pays the router
+        # pipeline (spec.router_stages, tracked per-flit via hop count).
+        moved = []
+        for (a, b) in edges:
+            q = queues[(a, b)]
+            if q:
+                moved.append((b, q.popleft()))
+        for b, (t0, dst, hops) in moved:
+            if b == dst:
+                if t >= warmup:
+                    lat = (t - t0) + (hops + 1) * spec.router_stages
+                    delivered += 1
+                    lat_sum += lat
+                    lats.append(lat)
+            else:
+                queues[(b, nh[b, dst])].append((t0, dst, hops + 1))
+
+        while ptr < m and inj_cycle[ptr] == t:
+            s, dd = int(src_all[ptr]), int(dst_all[ptr])
+            queues[(s, nh[s, dd])].append((t, dd, 0))
+            ptr += 1
+
+    eff_cycles = cycles - warmup
+    return dict(
+        throughput=delivered / eff_cycles,
+        offered=total_rate,
+        mean_latency=(lat_sum / delivered) if delivered else np.inf,
+        p99_latency=float(np.percentile(lats, 99)) if lats else np.inf,
+        delivered=delivered,
+    )
+
+
+def saturation_throughput(
+    spec: SystemSpec, d: Design, f: np.ndarray, *, seed: int = 0,
+    scales=(4.0, 8.0, 16.0, 32.0), cycles: int = 2000,
+) -> float:
+    """Accepted throughput under heavy offered load (network saturation) —
+    the quantity Fig. 4 plots against Ū and σ."""
+    best = 0.0
+    for s in scales:
+        r = simulate(spec, d, f, inj_scale=s / max(f.sum(), 1e-9),
+                     cycles=cycles, warmup=cycles // 4, seed=seed)
+        best = max(best, r["throughput"])
+    return best
+
+
+def simulated_edp(spec: SystemSpec, d: Design, f: np.ndarray,
+                  energy: float, *, seed: int = 0, cycles: int = 3000) -> float:
+    """Network EDP with SIMULATED latency (paper §6.1's metric): mean packet
+    latency at the application's native injection rate x network energy."""
+    r = simulate(spec, d, f, cycles=cycles, seed=seed)
+    return r["mean_latency"] * energy

@@ -1,0 +1,138 @@
+"""NSGA-II (Deb et al. [9]) — secondary baseline (the paper cites it as the
+canonical GA-based MOO; AMOSA was shown superior in [10], we include both).
+
+Variation operators respect the design space: crossover recombines the two
+parents' tile placements (cycle-style repair to stay a permutation) and
+takes a random mix of their planar links (repaired to the exact link
+budget); mutation applies the paper's neighbor moves. Evaluation is batched
+through the jitted Evaluator — a full population is scored per XLA call."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .evaluate import Evaluator
+from .local_search import ParetoSet, SearchHistory
+from .pareto import PhvContext
+from .problem import Design, SystemSpec, sample_neighbors
+
+
+def _fast_nondominated_rank(objs: np.ndarray) -> np.ndarray:
+    n = objs.shape[0]
+    le = np.all(objs[:, None, :] <= objs[None, :, :], axis=-1)
+    lt = np.any(objs[:, None, :] < objs[None, :, :], axis=-1)
+    dom = le & lt
+    n_dom = dom.sum(axis=0)  # how many dominate j
+    rank = np.full(n, -1)
+    r = 0
+    remaining = np.ones(n, dtype=bool)
+    while remaining.any():
+        front = remaining & (n_dom == 0)
+        if not front.any():  # numerical ties
+            front = remaining
+        rank[front] = r
+        for i in np.flatnonzero(front):
+            n_dom -= dom[i]
+        remaining &= ~front
+        r += 1
+    return rank
+
+
+def _crowding(objs: np.ndarray) -> np.ndarray:
+    n, m = objs.shape
+    crowd = np.zeros(n)
+    for j in range(m):
+        order = np.argsort(objs[:, j], kind="stable")
+        rng_j = objs[order[-1], j] - objs[order[0], j] + 1e-12
+        crowd[order[0]] = crowd[order[-1]] = np.inf
+        if n > 2:
+            crowd[order[1:-1]] += (objs[order[2:], j] - objs[order[:-2], j]) / rng_j
+    return crowd
+
+
+def _crossover(spec: SystemSpec, a: Design, b: Design,
+               rng: np.random.Generator) -> Design:
+    n = spec.n_tiles
+    # Placement: copy a then graft a random segment of b, repairing to a perm.
+    child = a.perm.copy()
+    lo, hi = sorted(rng.choice(n, size=2, replace=False))
+    seg = b.perm[lo:hi]
+    rest = [c for c in a.perm if c not in set(seg.tolist())]
+    child[lo:hi] = seg
+    child[:lo] = rest[:lo]
+    child[hi:] = rest[lo:]
+    # Links: union, keep budget many (prefer common links).
+    iu = np.triu_indices(n, 1)
+    both = a.adj[iu] & b.adj[iu]
+    either = (a.adj[iu] | b.adj[iu]) & ~both
+    need = spec.n_planar_links - int(both.sum())
+    pick = np.flatnonzero(either)
+    rng.shuffle(pick)
+    sel = both.copy()
+    sel[pick[:need]] = True
+    adj = np.zeros((n, n), dtype=bool)
+    adj[iu[0][sel], iu[1][sel]] = True
+    return Design(perm=child.astype(np.int32), adj=adj | adj.T)
+
+
+def nsga2(
+    spec: SystemSpec,
+    ev: Evaluator,
+    ctx: PhvContext,
+    d0: Design,
+    seed: int = 0,
+    *,
+    pop_size: int = 32,
+    generations: int = 30,
+    p_mutate: float = 0.6,
+    max_evals: int | None = None,
+    history: SearchHistory | None = None,
+) -> ParetoSet:
+    rng = np.random.default_rng(seed)
+    history = history or SearchHistory(ev, ctx)
+
+    pop = [d0]
+    while len(pop) < pop_size:
+        nb = sample_neighbors(spec, d0, rng, 2, 2)
+        pop.append(nb[rng.integers(len(nb))] if nb else d0.copy())
+    objs = ev.batch(pop)
+    for d, o in zip(pop, objs):
+        history.record(ev, d, o)
+
+    for _ in range(generations):
+        if max_evals is not None and ev.n_evals >= max_evals:
+            break
+        sub = objs[:, list(ctx.obj_idx)]
+        rank = _fast_nondominated_rank(sub)
+        crowd = _crowding(sub)
+
+        def tournament():
+            i, j = rng.integers(len(pop), size=2)
+            if rank[i] < rank[j] or (rank[i] == rank[j] and crowd[i] > crowd[j]):
+                return pop[i]
+            return pop[j]
+
+        children: list[Design] = []
+        while len(children) < pop_size:
+            c = _crossover(spec, tournament(), tournament(), rng)
+            if rng.random() < p_mutate:
+                nb = sample_neighbors(spec, c, rng, 1, 1)
+                if nb:
+                    c = nb[rng.integers(len(nb))]
+            children.append(c)
+        child_objs = ev.batch(children)
+        for d, o in zip(children, child_objs):
+            history.record(ev, d, o)
+
+        # Environmental selection over parents + children.
+        union = pop + children
+        uobjs = np.vstack([objs, child_objs])
+        sub = uobjs[:, list(ctx.obj_idx)]
+        rank = _fast_nondominated_rank(sub)
+        crowd = _crowding(sub)
+        order = np.lexsort((-crowd, rank))
+        keep = order[:pop_size]
+        pop = [union[i] for i in keep]
+        objs = uobjs[keep]
+
+    return ParetoSet.empty().merged_with(pop, objs, ctx.obj_idx)

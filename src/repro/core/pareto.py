@@ -1,0 +1,115 @@
+"""Pareto dominance + hypervolume (PHV) utilities.
+
+PHV follows "Hypervolume by Slicing Objectives" (While et al. [36], cited by
+the paper §5.1): recursively slice along one objective and aggregate
+(m-1)-dimensional hypervolumes. All objectives are MINIMIZED; the
+hypervolume is measured against an upper reference point ``ref`` and only
+counts the region dominated by the set and bounded by ``ref``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def dominates(a: np.ndarray, b: np.ndarray) -> bool:
+    """a ≺ b (a dominates b) under minimization — paper §5.1."""
+    return bool(np.all(a <= b) and np.any(a < b))
+
+
+def pareto_mask(points: np.ndarray) -> np.ndarray:
+    """Boolean mask of non-dominated rows. Duplicate rows: first one kept."""
+    pts = np.asarray(points, dtype=np.float64)
+    n = pts.shape[0]
+    if n == 0:
+        return np.zeros((0,), dtype=bool)
+    le = np.all(pts[:, None, :] <= pts[None, :, :], axis=-1)
+    lt = np.any(pts[:, None, :] < pts[None, :, :], axis=-1)
+    dom = le & lt  # dom[i, j]: i dominates j
+    mask = ~dom.any(axis=0)
+    # Deduplicate exact ties (keep first).
+    if mask.sum() > 1:
+        idx = np.flatnonzero(mask)
+        seen: set[bytes] = set()
+        for i in idx:
+            k = pts[i].tobytes()
+            if k in seen:
+                mask[i] = False
+            else:
+                seen.add(k)
+    return mask
+
+
+def pareto_filter(points: np.ndarray) -> np.ndarray:
+    return np.asarray(points)[pareto_mask(points)]
+
+
+def hypervolume(points: np.ndarray, ref: np.ndarray) -> float:
+    """Hypervolume (minimization) of ``points`` w.r.t. upper bound ``ref``.
+
+    Points at or beyond ``ref`` in any coordinate contribute only their
+    clipped part. Implemented as recursive HSO with memo on the first axis.
+    """
+    pts = np.asarray(points, dtype=np.float64)
+    ref = np.asarray(ref, dtype=np.float64)
+    if pts.size == 0:
+        return 0.0
+    pts = np.minimum(pts, ref)  # clip (degenerate slices contribute 0 width)
+    pts = pareto_filter(pts)
+    return _hso(pts, ref)
+
+
+def _hso(pts: np.ndarray, ref: np.ndarray) -> float:
+    m = ref.shape[0]
+    if pts.shape[0] == 0:
+        return 0.0
+    if m == 1:
+        return float(max(0.0, ref[0] - pts[:, 0].min()))
+    order = np.argsort(pts[:, 0], kind="stable")
+    pts = pts[order]
+    vol = 0.0
+    n = pts.shape[0]
+    for i in range(n):
+        x_lo = pts[i, 0]
+        x_hi = pts[i + 1, 0] if i + 1 < n else ref[0]
+        width = x_hi - x_lo
+        if width <= 0.0:
+            continue
+        slab = pareto_filter(pts[: i + 1, 1:])
+        vol += width * _hso(slab, ref[1:])
+    return float(vol)
+
+
+class PhvContext:
+    """Fixed normalization for PHV across one optimization run.
+
+    Objectives are divided by the starting (3D-mesh) design's objective
+    values, so every search for a given (spec, traffic, case) shares one
+    scale; the reference point is ``ref_scale`` in those units (designs worse
+    than ``ref_scale``x mesh contribute zero volume)."""
+
+    def __init__(self, mesh_objs: np.ndarray, obj_idx: tuple[int, ...],
+                 ref_scale: float = 1.6):
+        self.obj_idx = tuple(obj_idx)
+        base = np.asarray(mesh_objs, dtype=np.float64)[list(obj_idx)]
+        base = np.where(base <= 0, 1.0, base)
+        self.base = base
+        self.ref = np.full(len(obj_idx), ref_scale, dtype=np.float64)
+
+    def normalize(self, objs: np.ndarray) -> np.ndarray:
+        o = np.asarray(objs, dtype=np.float64)
+        sel = o[..., list(self.obj_idx)]
+        return sel / self.base
+
+    def phv(self, objs: np.ndarray) -> float:
+        """PHV of a set of (full 5-dim) objective rows under this context."""
+        if objs.size == 0:
+            return 0.0
+        return hypervolume(self.normalize(np.atleast_2d(objs)), self.ref)
+
+    def phv_with(self, set_objs: np.ndarray, extra: np.ndarray) -> float:
+        """PHV(S ∪ {d}) — Alg. 1 line 3."""
+        ext = np.atleast_2d(extra)
+        if set_objs.size == 0:
+            return self.phv(ext)
+        return self.phv(np.vstack([np.atleast_2d(set_objs), ext]))

@@ -1,0 +1,114 @@
+"""Routing model: all-pairs shortest paths + deterministic path walking (JAX).
+
+The paper routes on irregular topologies with ALASH (layered shortest-path)
+[40]. For the *analytical* objectives only a deterministic single path per
+(src, dst) is needed (Eq. 1 note: "the path ... is determined by the routing
+algorithm"), so we model routing as minimum-latency shortest path with
+lexicographic tie-breaking:
+
+    cost(hop over link (a, b)) = r + d_ab     (router stages + wire delay)
+
+APSP is computed by min-plus matrix squaring — O(log N) dense min-plus
+matmuls, which is the TPU-friendly formulation (see kernels/minplus for the
+Pallas version; the jnp path here is the oracle). Next hops follow the
+Bellman condition nh[i,j] = argmin_m cost[i,m] + dist[m,j], and a vectorized
+walk over all N^2 pairs accumulates, in one pass:
+
+  * per-pair hop count h_ij and wire delay d_ij     (Eq. 1),
+  * f-weighted directed link utilization U          (Eq. 2),
+  * f-weighted router visit counts                  (Eq. 8).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+INF = 1.0e9
+
+
+def min_plus(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(N,N) min-plus product: out[i,j] = min_k a[i,k] + b[k,j]."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def apsp(cost: jnp.ndarray, n_iters: int) -> jnp.ndarray:
+    """All-pairs shortest path distances by repeated min-plus squaring.
+
+    ``cost`` must have 0 on the diagonal and INF for absent edges.
+    ``n_iters >= ceil(log2(N))`` guarantees convergence."""
+    def body(_, d):
+        return min_plus(d, d)
+
+    return jax.lax.fori_loop(0, n_iters, body, cost)
+
+
+def next_hop(cost: jnp.ndarray, dist: jnp.ndarray) -> jnp.ndarray:
+    """nh[i, j] = first-index argmin_m (cost[i, m] + dist[m, j]).
+
+    Deterministic single-path routing: ties break toward the lowest slot
+    index (stands in for ALASH's layered escape-path determinism)."""
+    n = cost.shape[0]
+    # scores[i, m, j]: go from i to neighbor m then shortest to j. Staying
+    # put (m == i, cost 0) must not be a candidate hop.
+    step_cost = jnp.where(jnp.eye(n, dtype=bool), INF, cost)
+    scores = step_cost[:, :, None] + dist[None, :, :]
+    nh = jnp.argmin(scores, axis=1).astype(jnp.int32)  # (N, N)
+    eye = jnp.arange(n, dtype=jnp.int32)
+    # For i == j route nowhere (stay).
+    return jnp.where(jnp.eye(n, dtype=bool), eye[:, None], nh)
+
+
+@partial(jax.jit, static_argnames=("max_hops",))
+def walk_paths(
+    nh: jnp.ndarray,          # (N, N) int32 next hops
+    link_delay: jnp.ndarray,  # (N, N) wire delay per directed edge
+    f: jnp.ndarray,           # (N, N) traffic between SLOTS (already permuted)
+    max_hops: int,
+):
+    """Walk every (src, dst) pair simultaneously for ``max_hops`` steps.
+
+    Returns (hops, delay, util, visits, all_done):
+      hops   (N, N) — links on the path i->j
+      delay  (N, N) — sum of wire delays along the path
+      util   (N, N) — f-weighted directed link usage  (Eq. 2 accumulation)
+      visits (N,)   — f-weighted router traversals (src router included at
+                      each step; dst router added at completion)  (Eq. 8)
+      all_done ()   — bool: every pair reached its destination
+    """
+    n = nh.shape[0]
+    src = jnp.arange(n, dtype=jnp.int32)[:, None] * jnp.ones((1, n), jnp.int32)
+    dst = jnp.arange(n, dtype=jnp.int32)[None, :] * jnp.ones((n, 1), jnp.int32)
+
+    def body(_, carry):
+        cur, hops, delay, util, visits = carry
+        done = cur == dst
+        nxt = nh[cur, dst]
+        w = jnp.where(done, 0.0, f)
+        util = util.at[cur, nxt].add(w)
+        visits = visits.at[cur].add(w)
+        delay = delay + jnp.where(done, 0.0, link_delay[cur, nxt])
+        hops = hops + jnp.where(done, 0, 1)
+        cur = jnp.where(done, cur, nxt)
+        return cur, hops, delay, util, visits
+
+    cur0 = src
+    hops0 = jnp.zeros((n, n), jnp.int32)
+    delay0 = jnp.zeros((n, n), jnp.float32)
+    util0 = jnp.zeros((n, n), jnp.float32)
+    visits0 = jnp.zeros((n,), jnp.float32)
+    cur, hops, delay, util, visits = jax.lax.fori_loop(
+        0, max_hops, body, (cur0, hops0, delay0, util0, visits0)
+    )
+    all_done = jnp.all(cur == dst)
+    # Destination router traversal (h hops -> h+1 routers).
+    visits = visits + f.sum(axis=0)
+    return hops, delay, util, visits, all_done
+
+
+def routing_tables(cost: jnp.ndarray, n_iters: int):
+    """Convenience: (dist, next_hop) from a hop-cost matrix."""
+    dist = apsp(cost, n_iters)
+    return dist, next_hop(cost, dist)

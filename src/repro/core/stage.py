@@ -1,0 +1,136 @@
+"""Algorithm 2 — MOO-STAGE.
+
+Iterates: Local search (Alg. 1, PHV-greedy) → merge into the global
+non-dominated set → learn Eval : features(d) ↦ PHV(local_search(d)) from all
+past trajectories (aggregated training set, DAgger-style) → Meta search
+(greedy ascent on Eval from d_last) to choose the next restart; random
+restart when the meta search cannot move (Alg. 2 lines 9-13).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .evaluate import Evaluator
+from .features import design_features
+from .forest import RegressionForest
+from .local_search import (LocalResult, ParetoSet, SearchHistory, local_search)
+from .pareto import PhvContext
+from .problem import Design, SystemSpec, random_design, sample_neighbors
+
+
+@dataclasses.dataclass
+class StageResult:
+    global_set: ParetoSet
+    history: SearchHistory
+    eval_errors: list[tuple[int, float]]   # (iteration, |Eval(d_start) - actual PHV|/PHV)
+    n_local_searches: int
+    converged: bool
+
+
+def _meta_greedy(
+    spec: SystemSpec,
+    model: RegressionForest,
+    d_from: Design,
+    rng: np.random.Generator,
+    *,
+    n_swaps: int,
+    n_link_moves: int,
+    max_steps: int = 30,
+) -> Design:
+    """Greedy ascent on the learned Eval (Alg. 2 line 9). Uses only cheap
+    structural features — no objective evaluations are spent here."""
+    d_curr = d_from
+    v_curr = float(model.predict(design_features(spec, d_curr)[None])[0])
+    for _ in range(max_steps):
+        cands = sample_neighbors(spec, d_curr, rng, n_swaps, n_link_moves)
+        if not cands:
+            break
+        feats = np.stack([design_features(spec, c) for c in cands])
+        vals = model.predict(feats)
+        j = int(np.argmax(vals))
+        if vals[j] <= v_curr + 1e-12:
+            break
+        d_curr, v_curr = cands[j], float(vals[j])
+    return d_curr
+
+
+def moo_stage(
+    spec: SystemSpec,
+    ev: Evaluator,
+    ctx: PhvContext,
+    d0: Design,
+    seed: int = 0,
+    *,
+    iters_max: int = 12,
+    n_swaps: int = 24,
+    n_link_moves: int = 24,
+    max_local_steps: int = 10_000,
+    forest_kwargs: dict | None = None,
+    history: SearchHistory | None = None,
+) -> StageResult:
+    rng = np.random.default_rng(seed)
+    history = history or SearchHistory(ev, ctx)
+    s_global = ParetoSet.empty()
+    x_train: list[np.ndarray] = []
+    y_train: list[float] = []
+    eval_errors: list[tuple[int, float]] = []
+    model: RegressionForest | None = None
+    d_start = d0
+    converged = False
+
+    for it in range(iters_max):
+        predicted = (
+            float(model.predict(design_features(spec, d_start)[None])[0])
+            if model is not None
+            else None
+        )
+        res: LocalResult = local_search(
+            spec, ev, ctx, d_start, rng,
+            n_swaps=n_swaps, n_link_moves=n_link_moves,
+            max_steps=max_local_steps, history=history,
+        )
+        if predicted is not None and res.phv > 0:
+            eval_errors.append((it, abs(predicted - res.phv) / res.phv))
+
+        # Merge local set into global set (Alg. 2 lines 3-4).
+        merged = s_global.merged_with(
+            res.local.designs, res.local.objs, ctx.obj_idx
+        )
+        new_keys = merged.keys() - s_global.keys()
+        local_keys = res.local.keys()
+        s_global = merged
+        if not (new_keys & local_keys):
+            # Local search contributed nothing new — converged (lines 5-6).
+            converged = True
+            break
+
+        # Aggregate training examples: every trajectory design is labeled
+        # with the PHV its local search achieved (line 7).
+        for d in res.traj:
+            x_train.append(design_features(spec, d))
+            y_train.append(res.phv)
+
+        fk = forest_kwargs or {}
+        model = RegressionForest(seed=seed + it, **fk).fit(
+            np.stack(x_train), np.asarray(y_train)
+        )
+
+        d_restart = _meta_greedy(
+            spec, model, res.d_last, rng,
+            n_swaps=n_swaps, n_link_moves=n_link_moves,
+        )
+        if d_restart.key() == res.d_last.key():
+            d_start = random_design(spec, rng)          # lines 10-11
+        else:
+            d_start = d_restart                          # line 13
+
+    return StageResult(
+        global_set=s_global,
+        history=history,
+        eval_errors=eval_errors,
+        n_local_searches=it + 1,
+        converged=converged,
+    )

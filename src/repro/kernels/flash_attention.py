@@ -1,0 +1,129 @@
+"""Fused attention (flash) forward kernel — causal / sliding-window / full.
+
+Online-softmax tiling for TPU: q blocks stream over kv blocks with the kv
+axis innermost in the grid; running (m, l, acc) state lives in VMEM scratch
+and the output block is written on the final kv step. GQA is expressed in
+the BlockSpec index maps (q head h reads kv head h // group) so no head
+replication ever materializes in HBM.
+
+Used by models/attention.py on TPU for train/prefill; the pure-jnp oracle
+(kernels/ref.py) is the CPU path and the backward recomputation (ops.py
+wires this kernel as a custom_vjp whose bwd re-runs the reference)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int | None,
+                  block_q: int, block_k: int, n_k_blocks: int):
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)   # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)   # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)   # (bk, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                              # (bq, bk)
+
+    q_pos = pl.program_id(2) * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (q.shape[0], k.shape[0]), 0
+    )
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (q.shape[0], k.shape[0]), 1
+    )
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    # Fully-masked rows (can happen under windowing) contribute nothing.
+    p = jnp.where(mask, p, 0.0)
+    l_new = l_scr[...][:, 0] * alpha + jnp.sum(p, axis=1)
+    acc = acc_scr[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new[:, None]
+    l_scr[...] = l_new[:, None]
+    acc_scr[...] = acc
+
+    @pl.when(kj == n_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...][:, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,   # (B, H, Sq, D)
+    k: jax.Array,   # (B, KH, Sk, D)
+    v: jax.Array,   # (B, KH, Sk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    assert h % kh == 0, "GQA requires q heads to be a multiple of kv heads"
+    group = h // kh
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, "pad sequence to block multiples"
+    n_k_blocks = sk // bk
+    scale = d ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, n_k_blocks=n_k_blocks,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, sq // bq, n_k_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, kj: (b_, h_, qi, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, qi, kj: (b_, h_ // group, kj, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, qi, kj: (b_, h_ // group, kj, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, qi, kj: (b_, h_, qi, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,116 @@
+"""Path-walk accumulation (Eq. 2 / Eq. 1 / Eq. 8 terms) as one-hot MXU matmuls.
+
+The scatter-add formulation (core/routing.walk_paths) is the natural GPU
+port; TPUs have no fast scatter, so this kernel re-expresses the walk as
+dense one-hot linear algebra — the DESIGN.md §4 hardware adaptation:
+
+  for each destination d (grid axis):
+    C_0 = I                      (N sources x N positions, one-hot "cursor")
+    M[v, u] = [nh[v, d] == u]    (next-hop transition matrix, one-hot)
+    per hop t:
+      C_{t+1} = C_t @ M                                (MXU)
+      util   += (C_t * w_t)^T @ C_{t+1}                (MXU; w_t = f masked by done)
+      delay_d += rowsum((C_t @ delay) * C_{t+1})       (MXU + VPU)
+      hops_d  += 1 - done,   visits += w_t @ C_t       (VPU)
+
+``nh`` must be self-absorbing at the destination (nh[d, d] = d), which
+core/routing.next_hop guarantees — finished pairs then accumulate zero
+because w_t is masked by done = C_t[:, d].
+
+All per-destination working state (C, M: N x N f32) lives in VMEM; with
+N = 64 that is 16 KiB per buffer. The destination axis is the (sequential)
+grid; util/visits blocks are revisited and accumulated across it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _walk_kernel(nh_col_ref, f_col_ref, delay_ref, util_ref, hops_ref,
+                 dsum_ref, visits_ref, *, max_hops: int, n: int):
+    d = pl.program_id(0)
+
+    @pl.when(d == 0)
+    def _init():
+        util_ref[...] = jnp.zeros_like(util_ref)
+        visits_ref[...] = jnp.zeros_like(visits_ref)
+
+    nh_col = nh_col_ref[...][:, 0]            # (N,) int32: nh[:, d]
+    f_col = f_col_ref[...][:, 0]              # (N,) f32:  f[:, d]
+    delay = delay_ref[...]                    # (N, N)
+
+    iota_u = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    m = (nh_col[:, None] == iota_u).astype(jnp.float32)      # (N, N)
+    c = (jax.lax.broadcasted_iota(jnp.int32, (n, n), 0) == iota_u
+         ).astype(jnp.float32)                               # identity
+
+    def body(_, carry):
+        c, util, hops, dsum, visits = carry
+        done = c[:, d]                                        # (N,)
+        w = f_col * (1.0 - done)
+        cn = jnp.dot(c, m, preferred_element_type=jnp.float32)
+        util = util + jnp.dot((c * w[:, None]).T, cn,
+                              preferred_element_type=jnp.float32)
+        step_delay = jnp.sum(
+            jnp.dot(c, delay, preferred_element_type=jnp.float32) * cn, axis=1
+        )
+        dsum = dsum + (1.0 - done) * step_delay
+        hops = hops + (1.0 - done)
+        visits = visits + jnp.dot(w[None, :], c,
+                                  preferred_element_type=jnp.float32)[0]
+        return cn, util, hops, dsum, visits
+
+    c, util_acc, hops, dsum, visits_acc = jax.lax.fori_loop(
+        0, max_hops, body,
+        (c, jnp.zeros((n, n), jnp.float32), jnp.zeros((n,), jnp.float32),
+         jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.float32)),
+    )
+    util_ref[...] += util_acc
+    visits_ref[...] += visits_acc[None, :]
+    hops_ref[...] = hops[:, None]
+    dsum_ref[...] = dsum[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops", "interpret"))
+def walk_accumulate(
+    nh: jax.Array,      # (N, N) int32 next hops
+    f: jax.Array,       # (N, N) f32 slot traffic
+    delay: jax.Array,   # (N, N) f32 per-edge wire delay
+    *,
+    max_hops: int,
+    interpret: bool = False,
+):
+    """Returns (hops, delay_sums, util, visits) matching
+    core/routing.walk_paths (visits includes the destination router)."""
+    n = nh.shape[0]
+    kernel = functools.partial(_walk_kernel, max_hops=max_hops, n=n)
+    util, hops, dsum, visits = pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda d: (0, d), memory_space=pltpu.VMEM),
+            pl.BlockSpec((n, 1), lambda d: (0, d), memory_space=pltpu.VMEM),
+            pl.BlockSpec((n, n), lambda d: (0, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, n), lambda d: (0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((n, 1), lambda d: (0, d), memory_space=pltpu.VMEM),
+            pl.BlockSpec((n, 1), lambda d: (0, d), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, n), lambda d: (0, 0), memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), jnp.float32),   # util (directed)
+            jax.ShapeDtypeStruct((n, n), jnp.float32),   # hops
+            jax.ShapeDtypeStruct((n, n), jnp.float32),   # delay sums
+            jax.ShapeDtypeStruct((1, n), jnp.float32),   # visits
+        ],
+        interpret=interpret,
+    )(nh.astype(jnp.int32), f.astype(jnp.float32), delay.astype(jnp.float32))
+    visits = visits[0] + jnp.sum(f, axis=0)  # destination router traversal
+    return hops, dsum, util, visits

@@ -1,0 +1,116 @@
+"""Mamba-2 SSD (state-space duality) chunked-scan kernel.
+
+The SSD recurrence
+
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t outer x_t
+    y_t = C_t . h_t + D_h * x_t
+
+is evaluated chunk-parallel (Dao & Gu, arXiv:2405.21060): within a chunk of
+Q timesteps everything is dense linear algebra on the MXU (the "dual"
+attention-like form), and only a (N_state x P) chunk-summary state crosses
+chunk boundaries. The chunk axis is the innermost (sequential) grid axis;
+the carried state lives in a VMEM scratch buffer that is reset whenever the
+(batch, head) grid coordinates change.
+
+Decay weights use log-space cumulative sums realized as a lower-triangular
+ones matmul (cumsum has no native TPU-Pallas lowering), and all exponents
+are <= 0 by construction (A < 0), so the kernel is numerically stable in
+f32. ngroups = 1 (B/C shared across heads), matching our model config.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_scr,
+                *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (Q,)
+    a = a_ref[0]                                   # scalar A_h (negative)
+    bmat = b_ref[0].astype(jnp.float32)            # (Q, N)
+    cmat = c_ref[0].astype(jnp.float32)            # (Q, N)
+    d_skip = d_ref[0]                              # scalar D_h
+
+    la = dt * a                                    # (Q,) log decay, <= 0
+    # Inclusive cumsum via lower-triangular ones matmul (MXU).
+    q = chunk
+    tril = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)).astype(jnp.float32)
+    s = jnp.dot(tril, la[:, None], preferred_element_type=jnp.float32)[:, 0]
+
+    # Intra-chunk ("dual" attention form).
+    g = jnp.dot(cmat, bmat.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    decay = jnp.exp(s[:, None] - s[None, :])
+    w = g * decay * dt[None, :] * tril
+    y = jnp.dot(w, x, preferred_element_type=jnp.float32)          # (Q, P)
+
+    # Inter-chunk: contribution of the carried state.
+    h_prev = state_scr[...]                                        # (N, P)
+    y = y + jnp.dot(cmat * jnp.exp(s)[:, None], h_prev,
+                    preferred_element_type=jnp.float32)
+
+    # State update for the next chunk.
+    to_end = jnp.exp(s[q - 1] - s) * dt                            # (Q,)
+    state_scr[...] = (
+        jnp.exp(s[q - 1]) * h_prev
+        + jnp.dot((bmat * to_end[:, None]).T, x,
+                  preferred_element_type=jnp.float32)
+    )
+
+    y_ref[0, :, 0, :] = (y + d_skip * x).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H)   positive step sizes
+    a: jax.Array,    # (H,)        negative decay rates
+    b: jax.Array,    # (B, S, N)   input projections (ngroups=1)
+    c: jax.Array,    # (B, S, N)   output projections
+    d: jax.Array,    # (H,)        skip connection
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, "pad sequence to a chunk multiple"
+    nchunks = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, c_: (b_, c_, h_),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p),
+                               lambda b_, h_, c_: (b_, c_, h_, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a.astype(jnp.float32), b, c, d.astype(jnp.float32))

@@ -1,0 +1,5 @@
+"""TPU v5e roofline constants (import-safe: no env mutation, no jax)."""
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # B/s per chip
+LINK_BW = 50e9           # B/s per ICI link (per chip, one link)

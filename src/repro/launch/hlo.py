@@ -1,0 +1,89 @@
+"""HLO text analysis: collective extraction for the roofline terms.
+
+compiled.cost_analysis() has no collective-byte accounting, so we parse the
+post-SPMD HLO: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute is counted with its RESULT shape (per-device), its
+participant-group size, and a ring-algorithm wire-byte estimate:
+
+    all-reduce        2 x R          (reduce-scatter + all-gather phases)
+    all-gather        R              (result is the gathered, full tensor)
+    reduce-scatter    R x n          (operand is the full tensor)
+    all-to-all        R
+    collective-permute R
+
+The (n-1)/n ring factor is folded to 1 (n >= 16 everywhere we care).
+Collectives inside while bodies appear once in the text — the roofline
+driver accounts for per-layer trip counts compositionally (roofline.py)."""
+
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s*(?P<result>.+?)\s+"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+\d*)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[\d+,(\d+)\]")
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(result):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """{kind: {count, result_bytes, wire_bytes}} over the module text."""
+    out = {k: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0}
+           for k in _KINDS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or ".done" in line:
+            continue
+        kind = m.group("kind")
+        if f"{kind}-done" in line:
+            continue
+        rbytes = _shape_bytes(m.group("result"))
+        gm = _GROUPS_RE.search(line)
+        im = _IOTA_RE.search(line)
+        n = (len(gm.group(1).split(",")) if gm
+             else int(im.group(1)) if im else 1)
+        if kind == "all-reduce":
+            wire = 2.0 * rbytes
+        elif kind == "reduce-scatter":
+            wire = float(rbytes * n)
+        else:
+            wire = float(rbytes)
+        out[kind]["count"] += 1
+        out[kind]["result_bytes"] += rbytes
+        out[kind]["wire_bytes"] += wire
+    return out
+
+
+def wire_bytes(parsed: dict) -> float:
+    return float(sum(v["wire_bytes"] for v in parsed.values()))
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}[.(]", hlo_text))

@@ -1,0 +1,87 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch yi-6b --smoke --steps 100
+
+Wires: config registry -> model -> sharding policy (per-shape defaults or
+§Perf-optimized: SP + microbatching) -> fault-tolerant Trainer (atomic
+checkpoints, restart-from-latest, straggler watchdog). On a real fleet this
+process runs per host under `jax.distributed.initialize()` (flag below);
+on the CPU container use --smoke for the reduced config.
+
+XLA flags for collective/compute overlap on TPU are set here (latency-
+hiding scheduler) — they are harmless no-ops on CPU."""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU containers)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence parallelism (EXPERIMENTS.md §Perf C3)")
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() (multi-host)")
+    args = ap.parse_args()
+
+    # Compute/communication overlap on TPU (no-op elsewhere).
+    os.environ.setdefault(
+        "LIBTPU_INIT_ARGS",
+        "--xla_tpu_enable_async_collective_fusion=true "
+        "--xla_tpu_enable_latency_hiding_scheduler=true",
+    )
+
+    import jax
+    if args.distributed:
+        jax.distributed.initialize()
+
+    from ..configs import get_config
+    from ..data import DataConfig, SyntheticLM
+    from ..dist import sharding as shd
+    from ..models import build
+    from ..train import OptConfig, TrainConfig, Trainer
+    from .mesh import make_host_mesh
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.smoke:
+        import jax.numpy as jnp
+        cfg = cfg.scaled(compute_dtype=jnp.float32)
+    model = build(cfg)
+    mesh = make_host_mesh()
+    policy = shd.Policy(
+        microbatches=args.microbatches,
+        grad_compress=args.grad_compress,
+    )
+    if args.seq_shard:
+        policy = policy.with_logical(seq=("model",))
+
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                                  global_batch=args.global_batch))
+    trainer = Trainer(
+        model, mesh, policy,
+        OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 5),
+                  total_steps=args.steps),
+        data,
+        TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                    ckpt_every=max(args.steps // 4, 10)),
+    )
+    out = trainer.run()
+    print(f"[train] {args.arch}: step {out['final_step']} "
+          f"loss {out['final_loss']:.4f} "
+          f"(data floor {data.entropy_floor():.4f}); "
+          f"stragglers: {len(out['straggler_events'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Model zoo: functional JAX implementations of every assigned architecture
+family (dense GQA, MoE, Mamba-2/SSD, hybrid, encoder-decoder, early-fusion
+VLM). See models/model.py for the unified interface."""
+
+from .common import ModelConfig, activation_sharding, pshard
+from .model import Model, build
+
+__all__ = ["Model", "ModelConfig", "activation_sharding", "build", "pshard"]

@@ -1,0 +1,120 @@
+"""GQA attention with RoPE — train/prefill (full-sequence) and decode
+(single-token against a KV cache) paths.
+
+The full-sequence path can use the Pallas flash kernel on TPU (static
+window); the jnp path supports *traced* per-layer windows (gemma3's 5:1
+local:global pattern inside one lax.scan). Decode always uses the jnp path
+(one query token; attention is a (1, S) contraction)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .common import ModelConfig, init_dense, pshard, rope
+
+FULL_WINDOW = 1 << 30  # sentinel "no window" as a dynamic-mask width
+
+
+def _effective_window(window) -> jax.Array:
+    """Window width as a dynamic mask bound; 0 means full attention whether
+    the width is a python int or a traced per-layer scalar."""
+    if isinstance(window, int):
+        return jnp.asarray(window if window > 0 else FULL_WINDOW, jnp.int32)
+    return jnp.where(window > 0, window, FULL_WINDOW).astype(jnp.int32)
+
+
+def init_attn_layer(cfg: ModelConfig, key) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], (d, cfg.n_heads * hd), dtype=cfg.dtype),
+        "wk": init_dense(ks[1], (d, cfg.n_kv_heads * hd), dtype=cfg.dtype),
+        "wv": init_dense(ks[2], (d, cfg.n_kv_heads * hd), dtype=cfg.dtype),
+        "wo": init_dense(ks[3], (cfg.n_heads * hd, d), dtype=cfg.dtype),
+    }
+
+
+def _project_qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cd = cfg.compute_dtype
+    q = (x @ p["wq"].astype(cd)).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"].astype(cd)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"].astype(cd)).reshape(b, s, cfg.n_kv_heads, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = pshard(q, ("batch", "seq", "heads", None))
+    k = pshard(k, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def attn_full(cfg: ModelConfig, p: dict, x: jax.Array, *,
+              window, causal: bool = True, positions=None) -> tuple:
+    """Full-sequence attention. ``window`` may be a python int (0 = full) or
+    a traced scalar (dynamic local/global patterns). Returns (y, (k, v))."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, positions)
+
+    static_window = isinstance(window, int)
+    if static_window and kops.on_tpu() and s % 128 == 0:
+        y = kops.attention(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+            causal=causal, window=(window or None),
+        ).swapaxes(1, 2)
+    else:
+        w = _effective_window(window)
+        qh = q.swapaxes(1, 2).astype(jnp.float32)          # (B,H,S,D)
+        kh = k.swapaxes(1, 2).astype(jnp.float32)
+        vh = v.swapaxes(1, 2).astype(jnp.float32)
+        group = cfg.n_heads // cfg.n_kv_heads
+        kh = jnp.repeat(kh, group, axis=1)
+        vh = jnp.repeat(vh, group, axis=1)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) * (qh.shape[-1] ** -0.5)
+        qp = jnp.arange(s)[:, None]
+        kp = jnp.arange(s)[None, :]
+        mask = (kp <= qp) if causal else jnp.ones((s, s), bool)
+        mask = mask & (kp > qp - w)
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        y = jnp.einsum("bhqk,bhkd->bhqd", probs, vh).swapaxes(1, 2)
+
+    y = y.reshape(b, s, -1).astype(cfg.compute_dtype)
+    y = pshard(y, ("batch", "seq", None))
+    return y @ p["wo"].astype(cfg.compute_dtype), (k, v)
+
+
+def attn_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache_k, cache_v,
+                pos: jax.Array, *, window=0) -> tuple:
+    """One-token decode. x (B,1,D); cache_k/v (B, S_max, KH, Dh); pos ()
+    current write index. Returns (y, new_k, new_v)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, positions)
+
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+
+    s_max = cache_k.shape[1]
+    group = cfg.n_heads // cfg.n_kv_heads
+    qh = q[:, 0].astype(jnp.float32)                       # (B, H, Dh)
+    kh = cache_k.astype(jnp.float32)                       # (B, S, KH, Dh)
+    w = _effective_window(window)
+    kp = jnp.arange(s_max, dtype=jnp.int32)
+    valid = (kp <= pos) & (kp > pos - w)
+    # Fold GQA: reshape q heads into (KH, group) and contract against the
+    # cache without materializing repeated KV heads.
+    qg = qh.reshape(b, cfg.n_kv_heads, group, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, kh) * (hd ** -0.5)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vh = cache_v.astype(jnp.float32)
+    y = jnp.einsum("bkgs,bskd->bkgd", probs, vh).reshape(b, 1, -1)
+    y = y.astype(cfg.compute_dtype)
+    return y @ p["wo"].astype(cfg.compute_dtype), cache_k, cache_v

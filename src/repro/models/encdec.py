@@ -1,0 +1,185 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel audio frontend is a STUB per the task rules: input_specs()
+hands the encoder precomputed frame embeddings (B, S_enc, D). The encoder is
+bidirectional attention + MLP; the decoder adds causal self-attention and
+cross-attention to the encoder output. Decode caches self-attn K/V per layer
+plus the (fixed) cross-attn K/V computed once from the encoder output."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_decode, attn_full, init_attn_layer
+from .common import ModelConfig, cross_entropy, init_dense, pshard, rms_norm
+from .transformer import init_mlp_layer, mlp
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, cfg.encoder_layers + cfg.n_layers + 4)
+    d = cfg.d_model
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": jnp.zeros((d,), cfg.dtype),
+            "attn": init_attn_layer(cfg, k1),
+            "norm2": jnp.zeros((d,), cfg.dtype),
+            "mlp": init_mlp_layer(cfg, k2),
+        }
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": jnp.zeros((d,), cfg.dtype),
+            "self_attn": init_attn_layer(cfg, k1),
+            "norm_x": jnp.zeros((d,), cfg.dtype),
+            "cross_attn": init_attn_layer(cfg, k2),
+            "norm2": jnp.zeros((d,), cfg.dtype),
+            "mlp": init_mlp_layer(cfg, k3),
+        }
+
+    enc = [enc_block(ks[i]) for i in range(cfg.encoder_layers)]
+    dec = [dec_block(ks[cfg.encoder_layers + i]) for i in range(cfg.n_layers)]
+    return {
+        "embed": init_dense(ks[-1], (cfg.vocab, d), dtype=cfg.dtype),
+        "head": init_dense(ks[-2], (d, cfg.vocab), dtype=cfg.dtype),
+        "enc_norm": jnp.zeros((d,), cfg.dtype),
+        "final_norm": jnp.zeros((d,), cfg.dtype),
+        "encoder": jax.tree.map(lambda *x: jnp.stack(x), *enc),
+        "decoder": jax.tree.map(lambda *x: jnp.stack(x), *dec),
+    }
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames (B, S_enc, D) from the stub frontend -> encoder states."""
+    x = frames.astype(cfg.compute_dtype)
+    x = pshard(x, ("batch", "seq", None))
+
+    def body(x, p):
+        h, _ = attn_full(cfg, p["attn"], rms_norm(x, p["norm1"], cfg.norm_eps),
+                         window=0, causal=False)
+        x = x + h
+        x = x + mlp(cfg, p["mlp"], rms_norm(x, p["norm2"], cfg.norm_eps))
+        return pshard(x, ("batch", "seq", None)), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attend(cfg, p, x, enc_k, enc_v):
+    """Cross attention with precomputed encoder K/V (no positional rotation)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cd = cfg.compute_dtype
+    q = (x @ p["wq"].astype(cd)).reshape(b, s, cfg.n_heads, hd)
+    group = cfg.n_heads // cfg.n_kv_heads
+    qh = q.swapaxes(1, 2).astype(jnp.float32)
+    kh = jnp.repeat(enc_k.swapaxes(1, 2).astype(jnp.float32), group, axis=1)
+    vh = jnp.repeat(enc_v.swapaxes(1, 2).astype(jnp.float32), group, axis=1)
+    a = jax.nn.softmax(
+        jnp.einsum("bhqd,bhkd->bhqk", qh, kh) * (hd ** -0.5), axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", a, vh).swapaxes(1, 2).reshape(b, s, -1)
+    return y.astype(cd) @ p["wo"].astype(cd)
+
+
+def _enc_kv(cfg, p, enc):
+    b, s, _ = enc.shape
+    hd = cfg.resolved_head_dim
+    cd = cfg.compute_dtype
+    k = (enc @ p["wk"].astype(cd)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (enc @ p["wv"].astype(cd)).reshape(b, s, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def decode_full(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                enc: jax.Array) -> jax.Array:
+    """Teacher-forced decoder pass -> logits (B, S_dec, V)."""
+    x = params["embed"][tokens].astype(cfg.compute_dtype) * (cfg.d_model ** 0.5)
+    x = pshard(x, ("batch", "seq", None))
+
+    def body(x, p):
+        h, _ = attn_full(cfg, p["self_attn"],
+                         rms_norm(x, p["norm1"], cfg.norm_eps), window=0)
+        x = x + h
+        ek, ev = _enc_kv(cfg, p["cross_attn"], enc)
+        x = x + _cross_attend(cfg, p["cross_attn"],
+                              rms_norm(x, p["norm_x"], cfg.norm_eps), ek, ev)
+        x = x + mlp(cfg, p["mlp"], rms_norm(x, p["norm2"], cfg.norm_eps))
+        return pshard(x, ("batch", "seq", None)), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return pshard(x @ params["head"].astype(cfg.compute_dtype),
+                  ("batch", "seq", "vocab"))
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    enc = encode(cfg, params, batch["frames"])
+    logits = decode_full(cfg, params, batch["tokens"], enc)
+    return cross_entropy(logits, batch["targets"], batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "ek": jnp.zeros((cfg.n_layers, batch, enc_len, cfg.n_kv_heads, hd), dtype),
+        "ev": jnp.zeros((cfg.n_layers, batch, enc_len, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ModelConfig, params: dict, frames: jax.Array,
+            tokens: jax.Array, max_len: int) -> tuple[jax.Array, dict]:
+    """Encode + teacher-forced context pass; caches cross K/V and self K/V."""
+    enc = encode(cfg, params, frames)
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len, enc.shape[1],
+                       dtype=cfg.compute_dtype)
+
+    # Cross K/V once per layer (scan over stacked decoder params).
+    def kv_body(_, p):
+        return None, _enc_kv(cfg, p["cross_attn"], enc)
+
+    _, (ek, ev) = jax.lax.scan(kv_body, None, params["decoder"])
+    cache["ek"], cache["ev"] = ek.astype(cache["ek"].dtype), ev.astype(cache["ev"].dtype)
+
+    logits = None
+    for i in range(s):  # context is short for enc-dec serving; step decode
+        logits, cache = decode_step(cfg, params, cache, tokens[:, i : i + 1])
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array) -> tuple[jax.Array, dict]:
+    x = params["embed"][tokens].astype(cfg.compute_dtype) * (cfg.d_model ** 0.5)
+    pos = cache["pos"]
+
+    def body(x, layer_in):
+        p, ck, cv, ek, ev = layer_in
+        h, nk, nv = attn_decode(
+            cfg, p["self_attn"], rms_norm(x, p["norm1"], cfg.norm_eps),
+            ck, cv, pos, window=0,
+        )
+        x = x + h
+        x = x + _cross_attend(cfg, p["cross_attn"],
+                              rms_norm(x, p["norm_x"], cfg.norm_eps),
+                              ek.astype(cfg.compute_dtype),
+                              ev.astype(cfg.compute_dtype))
+        x = x + mlp(cfg, p["mlp"], rms_norm(x, p["norm2"], cfg.norm_eps))
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["ek"], cache["ev"])
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["head"].astype(cfg.compute_dtype)
+    new_cache = dict(cache, k=nk, v=nv, pos=pos + 1)
+    return logits, new_cache

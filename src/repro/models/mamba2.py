@@ -1,0 +1,126 @@
+"""Mamba-2 block (SSD) — full-sequence (train/prefill) and stateful decode.
+
+Structure follows arXiv:2405.21060 (ngroups = 1): in_proj -> (z | x | B | C
+| dt), short causal depthwise conv over (x, B, C), softplus dt, SSD core
+(kernels/ops.ssd: Pallas chunked kernel on TPU, chunked jnp elsewhere),
+gated RMSNorm, out_proj. Decode carries (conv window, SSM state) — O(1)
+memory per token, which is why the SSM archs run the long_500k shape."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .common import ModelConfig, init_dense, pshard, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = h * p
+    conv_dim = d_in + 2 * n
+    return h, p, n, d_in, conv_dim
+
+
+def init_mamba_layer(cfg: ModelConfig, key) -> dict:
+    h, p_, n, d_in, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": init_dense(ks[0], (d, 2 * d_in + 2 * n + h), dtype=cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim))
+                   * 0.1).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, float(h), h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((d_in,), cfg.dtype),
+        "out_proj": init_dense(ks[4], (d_in, d), dtype=cfg.dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    h, p_, n, d_in, _ = _dims(cfg)
+    z, xs, bmat, cmat, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    return z, xs, bmat, cmat, dt
+
+
+def mamba_full(cfg: ModelConfig, p: dict, x: jax.Array,
+               return_state: bool = False):
+    """x (B, S, D) -> (B, S, D); with ``return_state``, also the decode
+    state {"conv", "ssm"} after the last position (the prefill path —
+    O(S) work instead of an S-step decode scan)."""
+    h, p_, n, d_in, conv_dim = _dims(cfg)
+    b, s, d = x.shape
+    cd = cfg.compute_dtype
+
+    proj = x @ p["in_proj"].astype(cd)
+    z, xs, bmat, cmat, dt = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)        # (B,S,conv)
+
+    # Causal depthwise conv, width K.
+    k = cfg.conv_width
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + s, :] * p["conv_w"].astype(cd)[i][None, None, :]
+        for i in range(k)
+    ) + p["conv_b"].astype(cd)
+    conv = jax.nn.silu(conv)
+    xs, bmat, cmat = jnp.split(conv, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    ssd_out = kops.ssd(
+        xs.reshape(b, s, h, p_).astype(jnp.float32), dt, a,
+        bmat.astype(jnp.float32), cmat.astype(jnp.float32), p["d_skip"],
+        chunk=min(64, s), return_state=return_state,
+    )
+    y, final_ssm = ssd_out if return_state else (ssd_out, None)
+    y = y.reshape(b, s, d_in).astype(cd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    y = pshard(y, ("batch", "seq", "heads_flat"))
+    out = y @ p["out_proj"].astype(cd)
+    if not return_state:
+        return out
+    conv_state = pad[:, s : s + k - 1, :].astype(jnp.float32)  # last K-1 raw
+    return out, {"conv": conv_state, "ssm": final_ssm}
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    h, p_, n, d_in, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, n, p_), jnp.float32),
+    }
+
+
+def mamba_decode(cfg: ModelConfig, p: dict, x: jax.Array, state: dict) -> tuple:
+    """x (B, 1, D); returns (y (B,1,D), new_state)."""
+    h, p_, n, d_in, conv_dim = _dims(cfg)
+    b = x.shape[0]
+    cd = cfg.compute_dtype
+
+    proj = x[:, 0] @ p["in_proj"].astype(cd)                # (B, ...)
+    z, xs, bmat, cmat, dt = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)        # (B, conv)
+
+    window = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (B,K,conv)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(cd), p["conv_w"].astype(cd))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(cd))
+    xs, bmat, cmat = jnp.split(conv, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    a = -jnp.exp(p["a_log"])                                       # (H,)
+    decay = jnp.exp(dt * a[None, :])                               # (B, H)
+    xh = xs.reshape(b, h, p_).astype(jnp.float32)
+    upd = jnp.einsum("bn,bhp->bhnp", bmat.astype(jnp.float32),
+                     xh * dt[..., None])
+    ssm = decay[..., None, None] * state["ssm"] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), ssm)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(b, d_in).astype(cd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(cd))[:, None, :]
+    return out, {"conv": window[:, 1:, :].astype(state["conv"].dtype), "ssm": ssm}

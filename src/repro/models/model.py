@@ -1,0 +1,53 @@
+"""Unified model interface: build(cfg) -> Model with init / loss / prefill /
+decode_step, used identically by the trainer, the serving engine, and the
+multi-pod dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+from .common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], jax.Array]
+    prefill: Callable[..., tuple]
+    decode_step: Callable[[Any, dict, jax.Array], tuple]
+    init_cache: Callable[..., dict]
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            loss=lambda p, b: encdec.loss_fn(cfg, p, b),
+            prefill=lambda p, frames, tokens, max_len: encdec.prefill(
+                cfg, p, frames, tokens, max_len),
+            decode_step=lambda p, cache, tok: encdec.decode_step(
+                cfg, p, cache, tok),
+            init_cache=lambda batch, max_len, enc_len=0, dtype=jnp.bfloat16:
+                encdec.init_cache(cfg, batch, max_len, enc_len, dtype),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        loss=lambda p, b: transformer.loss_fn(cfg, p, b),
+        prefill=lambda p, tokens, max_len: transformer.prefill(
+            cfg, p, tokens, max_len),
+        decode_step=lambda p, cache, tok: transformer.decode_step(
+            cfg, p, cache, tok),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16:
+            transformer.init_cache(cfg, batch, max_len, dtype),
+    )

@@ -1,0 +1,85 @@
+"""Top-k Mixture-of-Experts FFN (GShard/Switch-style capacity dispatch).
+
+Dispatch/combine are dense one-hot einsums — the TPU-idiomatic formulation
+(MXU matmuls; no scatter). Tokens are processed in groups so the dispatch
+tensor (g, s, e, c) stays VMEM/HBM-friendly, and the expert dimension of
+both the stacked expert weights and every dispatch intermediate carries the
+'experts' logical axis — expert parallelism falls out of the sharding rules
+(all-to-all inserted by GSPMD), which is exactly the many-to-few traffic the
+paper's NoC objectives target (DESIGN.md §4)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, init_dense, pshard
+
+GROUP_SIZE = 1024  # tokens per dispatch group
+
+
+def init_moe_layer(cfg: ModelConfig, key) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": init_dense(ks[0], (d, e), dtype=jnp.float32),
+        "w1": init_dense(ks[1], (e, d, f), scale_axis=1, dtype=cfg.dtype),
+        "w3": init_dense(ks[2], (e, d, f), scale_axis=1, dtype=cfg.dtype),
+        "w2": init_dense(ks[3], (e, f, d), scale_axis=1, dtype=cfg.dtype),
+    }
+
+
+def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (y, aux_loss). Load-balancing aux loss per GShard."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cd = cfg.compute_dtype
+
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    g_size = min(GROUP_SIZE, t)
+    n_groups = t // g_size
+    xg = tokens[: n_groups * g_size].reshape(n_groups, g_size, d)
+    xg = pshard(xg, ("batch", None, None))
+
+    # Router (f32 for numerics).
+    logits = xg.astype(jnp.float32) @ p["router"]            # (g, s, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (g, s, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Load-balancing auxiliary loss (mean prob * mean assignment per expert).
+    me = jnp.mean(probs, axis=(0, 1))                        # (e,)
+    assign = jax.nn.one_hot(expert_ids, e, dtype=jnp.float32).sum(2)  # (g,s,e)
+    ce = jnp.mean(assign, axis=(0, 1)) / k
+    aux = e * jnp.sum(me * ce)
+
+    capacity = int(max(k, round(g_size * k / e * cfg.capacity_factor)))
+    sel = jax.nn.one_hot(expert_ids, e, dtype=jnp.float32)   # (g, s, k, e)
+    # Position of each (token, choice) within its expert's buffer.
+    flat_sel = sel.reshape(n_groups, g_size * k, e)
+    pos = jnp.cumsum(flat_sel, axis=1) - 1.0                 # (g, s*k, e)
+    pos = pos.reshape(n_groups, g_size, k, e)
+    within = (pos < capacity) & (sel > 0)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity, dtype=jnp.float32)
+    # dispatch (g, s, e, c): token -> expert buffer slot.
+    dispatch = jnp.einsum("gske,gskec->gsec", sel, pos_oh * within[..., None])
+    combine = jnp.einsum("gske,gskec->gsec",
+                         sel * gate_vals[..., None], pos_oh * within[..., None])
+    dispatch = pshard(dispatch.astype(cd), ("batch", None, "experts", None))
+    combine = pshard(combine.astype(cd), ("batch", None, "experts", None))
+
+    # Expert buffers and the expert FFN (stacked einsum over e).
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xg.astype(cd))
+    xe = pshard(xe, ("experts", "batch", None, None))
+    h = jnp.einsum("egcd,edf->egcf", xe, p["w1"].astype(cd))
+    hg = jnp.einsum("egcd,edf->egcf", xe, p["w3"].astype(cd))
+    h = jax.nn.silu(h) * hg
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w2"].astype(cd))
+    ye = pshard(ye, ("experts", "batch", None, None))
+
+    yg = jnp.einsum("gsec,egcd->gsd", combine, ye)
+    y = yg.reshape(-1, d)
+    if y.shape[0] < t:  # ragged tail (never happens for our shapes)
+        y = jnp.concatenate([y, tokens[y.shape[0]:]], axis=0)
+    return y.reshape(b, s, d).astype(cd), aux.astype(jnp.float32)

@@ -1,0 +1,367 @@
+"""Decoder-only LM assembly for dense / MoE / SSM / hybrid / VLM families.
+
+Depth is always a lax.scan over stacked layer params (O(1) HLO in depth),
+with jax.checkpoint around the scanned body when cfg.remat. Layer-index-
+dependent behaviour (gemma3's 5:1 local:global windows) rides the scan as a
+per-layer xs array (traced window width -> one uniform code path). The
+zamba2-style hybrid nests scans: outer over "sites" (shared attention block
++ its KV cache), inner over the mamba sublayers between sites."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_decode, attn_full, init_attn_layer
+from .common import (ModelConfig, cross_entropy, init_dense, pshard,
+                     rms_norm, scan_layers)
+from .mamba2 import (init_mamba_layer, mamba_decode, mamba_full,
+                     mamba_init_state)
+from .moe import init_moe_layer, moe_ffn
+
+AUX_LOSS_COEF = 0.01
+
+
+# ------------------------------------------------------------------- init
+def init_mlp_layer(cfg: ModelConfig, key) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": init_dense(ks[0], (d, f), dtype=cfg.dtype),
+        "w3": init_dense(ks[1], (d, f), dtype=cfg.dtype),
+        "w2": init_dense(ks[2], (f, d), dtype=cfg.dtype),
+    }
+
+
+def _init_block(cfg: ModelConfig, key) -> dict:
+    """One decoder block of the family's repeating unit."""
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if cfg.family in ("dense", "vlm"):
+        return {
+            "norm1": jnp.zeros((d,), cfg.dtype),
+            "attn": init_attn_layer(cfg, ks[0]),
+            "norm2": jnp.zeros((d,), cfg.dtype),
+            "mlp": init_mlp_layer(cfg, ks[1]),
+        }
+    if cfg.family == "moe":
+        return {
+            "norm1": jnp.zeros((d,), cfg.dtype),
+            "attn": init_attn_layer(cfg, ks[0]),
+            "norm2": jnp.zeros((d,), cfg.dtype),
+            "moe": init_moe_layer(cfg, ks[1]),
+        }
+    if cfg.family in ("ssm", "hybrid"):
+        return {
+            "norm1": jnp.zeros((d,), cfg.dtype),
+            "mamba": init_mamba_layer(cfg, ks[0]),
+        }
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    blocks = [_init_block(cfg, ks[i]) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    params = {
+        "embed": init_dense(ks[-1], (cfg.vocab, cfg.d_model), dtype=cfg.dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "layers": stacked,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_dense(ks[-2], (cfg.d_model, cfg.vocab),
+                                    dtype=cfg.dtype)
+    if cfg.family == "hybrid":
+        params["shared"] = {
+            "norm1": jnp.zeros((cfg.d_model,), cfg.dtype),
+            "attn": init_attn_layer(cfg, ks[-3]),
+            "norm2": jnp.zeros((cfg.d_model,), cfg.dtype),
+            "mlp": init_mlp_layer(cfg, ks[-4]),
+        }
+    return params
+
+
+# ---------------------------------------------------------------- helpers
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    cd = cfg.compute_dtype
+    h = jax.nn.silu(x @ p["w1"].astype(cd)) * (x @ p["w3"].astype(cd))
+    h = pshard(h, ("batch", "seq", "mlp"))
+    return h @ p["w2"].astype(cd)
+
+
+def _window_schedule(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer attention window (0 = full) as a scan-carried xs array."""
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.sliding_window and cfg.global_every:
+        is_global = (idx + 1) % cfg.global_every == 0
+        return jnp.where(is_global, 0, cfg.sliding_window).astype(jnp.int32)
+    if cfg.sliding_window:
+        return jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+    return jnp.zeros((cfg.n_layers,), jnp.int32)
+
+
+def _embed(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    return pshard(x * (cfg.d_model ** 0.5), ("batch", "seq", None))
+
+
+def _logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    out = x @ head.astype(cfg.compute_dtype)
+    return pshard(out, ("batch", "seq", "vocab"))
+
+
+# ------------------------------------------------------------ full forward
+def forward_full(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                 *, collect_cache: bool = False):
+    """Full-sequence forward. Returns (hidden, aux_loss, caches or None).
+
+    caches: attention (k, v) stacked (L, B, S, KH, Dh) for attn families; for
+    hybrid, per-site stacks; unused for pure SSM prefill (decode re-runs the
+    sequence through mamba states via prefill_states)."""
+    x = _embed(cfg, params, tokens)
+    windows = _window_schedule(cfg)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, layer_in):
+            x, aux = carry
+            p, w = layer_in
+            h, (k, v) = attn_full(
+                cfg, p["attn"], rms_norm(x, p["norm1"], cfg.norm_eps), window=w
+            )
+            x = x + h
+            z = rms_norm(x, p["norm2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                y, a = moe_ffn(cfg, p["moe"], z)
+                aux = aux + a
+            else:
+                y = mlp(cfg, p["mlp"], z)
+            x = pshard(x + y, ("batch", "seq", None))
+            return (x, aux), (k, v) if collect_cache else None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), kv = scan_layers(
+            body, (x, jnp.zeros((), jnp.float32)), (params["layers"], windows),
+            unroll=cfg.unroll_layers,
+        )
+        return x, aux, kv
+
+    if cfg.family == "ssm":
+        def body(carry, p):
+            x = carry
+            h = mamba_full(cfg, p["mamba"],
+                           rms_norm(x, p["norm1"], cfg.norm_eps),
+                           return_state=collect_cache)
+            h, st = h if collect_cache else (h, None)
+            x = pshard(x + h, ("batch", "seq", None))
+            return x, (st if collect_cache else None)
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, states = scan_layers(body, x, params["layers"],
+                                unroll=cfg.unroll_layers)
+        return x, jnp.zeros((), jnp.float32), states
+
+    if cfg.family == "hybrid":
+        n_sites = cfg.n_layers // cfg.attn_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_sites, cfg.attn_every, *a.shape[1:]),
+            params["layers"],
+        )
+        shared = params["shared"]
+
+        def inner(x, p):
+            h = mamba_full(cfg, p["mamba"],
+                           rms_norm(x, p["norm1"], cfg.norm_eps),
+                           return_state=collect_cache)
+            h, st = h if collect_cache else (h, None)
+            x = pshard(x + h, ("batch", "seq", None))
+            return x, (st if collect_cache else None)
+
+        def outer_fixed(x, site_params):
+            x, states = scan_layers(inner, x, site_params,
+                                    unroll=cfg.unroll_layers)
+            h, (k, v) = attn_full(
+                cfg, shared["attn"],
+                rms_norm(x, shared["norm1"], cfg.norm_eps), window=0,
+            )
+            x = x + h
+            x = x + mlp(cfg, shared["mlp"],
+                        rms_norm(x, shared["norm2"], cfg.norm_eps))
+            return pshard(x, ("batch", "seq", None)), \
+                ((k, v, states) if collect_cache else None)
+
+        of = jax.checkpoint(outer_fixed) if cfg.remat else outer_fixed
+        x, kv = scan_layers(of, x, grouped, unroll=cfg.unroll_layers)
+        return x, jnp.zeros((), jnp.float32), kv
+
+    raise ValueError(cfg.family)
+
+
+# ------------------------------------------------------------------- loss
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    x, aux, _ = forward_full(cfg, params, batch["tokens"])
+    logits = _logits(cfg, params, x)
+    ce = cross_entropy(logits, batch["targets"], batch.get("mask"))
+    return ce + AUX_LOSS_COEF * aux
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    hd = cfg.resolved_head_dim
+    kv = lambda: jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd),
+                           dtype)
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {"k": kv(), "v": kv(), "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        st = mamba_init_state(cfg, batch)
+        return {
+            "conv": jnp.zeros((cfg.n_layers, *st["conv"].shape), jnp.float32),
+            "ssm": jnp.zeros((cfg.n_layers, *st["ssm"].shape), jnp.float32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        n_sites = cfg.n_layers // cfg.attn_every
+        st = mamba_init_state(cfg, batch)
+        return {
+            "conv": jnp.zeros((cfg.n_layers, *st["conv"].shape), jnp.float32),
+            "ssm": jnp.zeros((cfg.n_layers, *st["ssm"].shape), jnp.float32),
+            "k": jnp.zeros((n_sites, batch, max_len, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((n_sites, batch, max_len, cfg.n_kv_heads, hd), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array) -> tuple[jax.Array, dict]:
+    """One decode step: tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    x = _embed(cfg, params, tokens)
+    pos = cache["pos"]
+    windows = _window_schedule(cfg)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(x, layer_in):
+            p, w, ck, cv = layer_in
+            h, nk, nv = attn_decode(
+                cfg, p["attn"], rms_norm(x, p["norm1"], cfg.norm_eps),
+                ck, cv, pos, window=w,
+            )
+            x = x + h
+            z = rms_norm(x, p["norm2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                y, _ = moe_ffn(cfg, p["moe"], z)
+            else:
+                y = mlp(cfg, p["mlp"], z)
+            return x + y, (nk, nv)
+
+        x, (nk, nv) = scan_layers(
+            body, x, (params["layers"], windows, cache["k"], cache["v"]),
+            unroll=cfg.unroll_layers,
+        )
+        new_cache = {"k": nk, "v": nv, "pos": pos + 1}
+
+    elif cfg.family == "ssm":
+        def body(x, layer_in):
+            p, conv, ssm = layer_in
+            y, st = mamba_decode(
+                cfg, p["mamba"], rms_norm(x, p["norm1"], cfg.norm_eps),
+                {"conv": conv, "ssm": ssm},
+            )
+            return x + y, (st["conv"], st["ssm"])
+
+        x, (nconv, nssm) = scan_layers(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]),
+            unroll=cfg.unroll_layers,
+        )
+        new_cache = {"conv": nconv, "ssm": nssm, "pos": pos + 1}
+
+    elif cfg.family == "hybrid":
+        n_sites = cfg.n_layers // cfg.attn_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_sites, cfg.attn_every, *a.shape[1:]),
+            params["layers"],
+        )
+        gconv = cache["conv"].reshape(n_sites, cfg.attn_every,
+                                      *cache["conv"].shape[1:])
+        gssm = cache["ssm"].reshape(n_sites, cfg.attn_every,
+                                    *cache["ssm"].shape[1:])
+        shared = params["shared"]
+
+        def inner(x, layer_in):
+            p, conv, ssm = layer_in
+            y, st = mamba_decode(
+                cfg, p["mamba"], rms_norm(x, p["norm1"], cfg.norm_eps),
+                {"conv": conv, "ssm": ssm},
+            )
+            return x + y, (st["conv"], st["ssm"])
+
+        def outer(x, site_in):
+            p, conv, ssm, ck, cv = site_in
+            x, (nconv, nssm) = scan_layers(inner, x, (p, conv, ssm),
+                                           unroll=cfg.unroll_layers)
+            h, nk, nv = attn_decode(
+                cfg, shared["attn"], rms_norm(x, shared["norm1"], cfg.norm_eps),
+                ck, cv, pos, window=0,
+            )
+            x = x + h
+            x = x + mlp(cfg, shared["mlp"],
+                        rms_norm(x, shared["norm2"], cfg.norm_eps))
+            return x, (nconv, nssm, nk, nv)
+
+        x, (nconv, nssm, nk, nv) = scan_layers(
+            outer, x, (grouped, gconv, gssm, cache["k"], cache["v"]),
+            unroll=cfg.unroll_layers,
+        )
+        new_cache = {
+            "conv": nconv.reshape(cache["conv"].shape),
+            "ssm": nssm.reshape(cache["ssm"].shape),
+            "k": nk, "v": nv, "pos": pos + 1,
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    return _logits(cfg, params, x), new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            max_len: int) -> tuple[jax.Array, dict]:
+    """Run the context once, returning last-position logits + a decode cache
+    sized max_len. (Attention families reuse the forward K/V; SSM families
+    replay tokens through decode steps is avoided — we rebuild states with a
+    scan over the sequence.)"""
+    b, s = tokens.shape
+    if cfg.family in ("dense", "vlm", "moe"):
+        x, _, kv = forward_full(cfg, params, tokens, collect_cache=True)
+        k, v = kv  # (L, B, S, KH, Dh)
+        cache = init_cache(cfg, b, max_len, dtype=k.dtype)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k, (0, 0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v, (0, 0, 0, 0, 0))
+        cache["pos"] = jnp.asarray(s, jnp.int32)
+        return _logits(cfg, params, x[:, -1:, :]), cache
+
+    # SSM / hybrid: ONE full-sequence pass; the SSD chunked form hands back
+    # the final recurrent state per layer (O(S) instead of an S-step decode
+    # scan — see EXPERIMENTS.md §Perf, ssm-prefill).
+    cache = init_cache(cfg, b, max_len)
+    x, _, collected = forward_full(cfg, params, tokens, collect_cache=True)
+    if cfg.family == "ssm":
+        states = collected
+        cache["conv"] = states["conv"].astype(cache["conv"].dtype)
+        cache["ssm"] = states["ssm"]
+    else:  # hybrid: (k, v, per-site mamba states)
+        k, v, states = collected
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+        cache["conv"] = states["conv"].reshape(cache["conv"].shape).astype(
+            cache["conv"].dtype)
+        cache["ssm"] = states["ssm"].reshape(cache["ssm"].shape)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return _logits(cfg, params, x[:, -1:, :]), cache

@@ -1,0 +1,57 @@
+"""Batched serving engine: prefill a batch of prompts, then step-decode with
+greedy sampling. Static batch (continuous batching would slot new requests
+into finished rows; the cache layout here — batch-major, position cursor per
+engine — is the layout that supports it, noted as future work)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from ..dist import sharding as shd
+from ..models.model import Model
+from ..models.common import activation_sharding
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    max_len: int = 256
+
+
+class Engine:
+    def __init__(self, model: Model, mesh: Mesh, policy: shd.Policy,
+                 params, cfg: ServeConfig):
+        self.model = model
+        self.mesh = mesh
+        self.policy = policy
+        self.params = params
+        self.cfg = cfg
+        act = shd.activation_shard_fn(mesh, policy)
+
+        def decode(params, cache, token):
+            with activation_sharding(act):
+                logits, cache = model.decode_step(params, cache, token)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt[:, None], cache
+
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+    def generate(self, prompts: np.ndarray) -> np.ndarray:
+        """prompts (B, S_prompt) int32 -> (B, max_new_tokens)."""
+        b, s = prompts.shape
+        max_len = max(self.cfg.max_len, s + self.cfg.max_new_tokens)
+        with self.mesh:
+            # Prefill: feed the prompt, take the next-token argmax.
+            logits, cache = self.model.prefill(
+                self.params, jnp.asarray(prompts), max_len)
+            tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+            out = [np.asarray(tok)]
+            for _ in range(self.cfg.max_new_tokens - 1):
+                tok, cache = self._decode(self.params, cache, tok)
+                out.append(np.asarray(tok))
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,5 @@
+from .optimizer import OptConfig
+from .trainer import TrainConfig, Trainer
+from .train_step import make_decode_fn, make_prefill_fn, make_train_fns
+__all__ = ["OptConfig", "TrainConfig", "Trainer", "make_decode_fn",
+           "make_prefill_fn", "make_train_fns"]

@@ -1,0 +1,157 @@
+"""Step builders: jitted, sharded train / prefill / decode steps.
+
+make_train_step composes: microbatch gradient accumulation (lax.scan —
+overlaps each microbatch's collectives with the next one's compute under the
+XLA latency-hiding scheduler), remat (per-layer, set in the model config),
+optional int8 gradient compression with error feedback, AdamW, and the
+activation/parameter sharding rules from repro.dist.sharding. The returned
+callables are what the trainer, the serving engine, and the multi-pod
+dry-run lower."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..dist import sharding as shd
+from ..models.common import activation_sharding
+from ..models.model import Model
+from . import grad_compress, optimizer
+
+
+def make_train_fns(model: Model, mesh: Mesh, policy: shd.Policy,
+                   opt_cfg: optimizer.OptConfig):
+    """Returns (init_state_fn, step_fn, state_shardings_fn).
+
+    state = {"params", "opt", "err"?}; step(state, batch) -> (state, metrics).
+    """
+    cfg = model.cfg
+    act_fn = shd.activation_shard_fn(mesh, policy)
+
+    def init_state(key):
+        params = model.init(key)
+        state = {"params": params, "opt": optimizer.init_state(params)}
+        if policy.grad_compress:
+            state["err"] = grad_compress.init_error(params)
+        return state
+
+    def state_specs(state_like):
+        pspecs = shd.param_specs(mesh, policy, state_like["params"])
+        out = {
+            "params": pspecs,
+            "opt": {
+                "m": pspecs,
+                "v": pspecs,
+                "step": P(),
+            },
+        }
+        if "err" in state_like:
+            out["err"] = pspecs
+        return out
+
+    def loss_fn(params, batch):
+        with activation_sharding(act_fn):
+            return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        k = policy.microbatches
+        if k <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        mb = jax.tree.map(
+            lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch)
+
+        def acc(carry, mbatch):
+            loss_sum, g_sum = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            return (loss_sum + loss,
+                    jax.tree.map(jnp.add, g_sum, g)), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, g_sum), _ = jax.lax.scan(acc, (jnp.zeros(()), zeros), mb)
+        inv = 1.0 / k
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+    def step(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        new_state = dict(state)
+        if policy.grad_compress:
+            # int8 + error feedback (see grad_compress.py for the wire-level
+            # shard_map form; here the quantization semantics apply in-graph).
+            def q(g, e):
+                _, _, new_e = grad_compress.quantize(g, e)
+                deq = g.astype(jnp.float32) + e - new_e
+                return deq, new_e
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_e = tdef.flatten_up_to(state["err"])
+            pairs = [q(g, e) for g, e in zip(flat_g, flat_e)]
+            grads = tdef.unflatten([p[0] for p in pairs])
+            new_state["err"] = tdef.unflatten([p[1] for p in pairs])
+        params, opt, stats = optimizer.apply(
+            opt_cfg, state["params"], grads, state["opt"])
+        new_state["params"] = params
+        new_state["opt"] = opt
+        return new_state, {"loss": loss, **stats}
+
+    def jitted_step(state_like, batch_like):
+        sspecs = state_specs(state_like)
+        bspecs = shd.batch_specs(mesh, policy, batch_like)
+        return jax.jit(
+            step,
+            in_shardings=(shd.named(mesh, sspecs), shd.named(mesh, bspecs)),
+            out_shardings=(shd.named(mesh, sspecs), None),
+            donate_argnums=(0,),
+        )
+
+    return init_state, jitted_step, state_specs
+
+
+def make_prefill_fn(model: Model, mesh: Mesh, policy: shd.Policy):
+    cfg = model.cfg
+    act_fn = shd.activation_shard_fn(mesh, policy)
+
+    def prefill(params, batch):
+        with activation_sharding(act_fn):
+            if cfg.family == "encdec":
+                return model.prefill(params, batch["frames"],
+                                     batch["tokens"],
+                                     batch["tokens"].shape[1] + 64)
+            return model.prefill(params, batch["tokens"],
+                                 batch["tokens"].shape[1])
+
+    def jitted(params_like, batch_like):
+        pspecs = shd.param_specs(mesh, policy, params_like)
+        bspecs = shd.batch_specs(mesh, policy, batch_like)
+        return jax.jit(
+            prefill,
+            in_shardings=(shd.named(mesh, pspecs), shd.named(mesh, bspecs)),
+        )
+
+    return jitted
+
+
+def make_decode_fn(model: Model, mesh: Mesh, policy: shd.Policy):
+    cfg = model.cfg
+    act_fn = shd.activation_shard_fn(mesh, policy)
+
+    def decode(params, cache, token):
+        with activation_sharding(act_fn):
+            return model.decode_step(params, cache, token)
+
+    def jitted(params_like, cache_like, token_like):
+        pspecs = shd.param_specs(mesh, policy, params_like)
+        cspecs = shd.cache_specs(mesh, policy, cfg, cache_like)
+        tspec = shd.batch_specs(mesh, policy, token_like)
+        return jax.jit(
+            decode,
+            in_shardings=(shd.named(mesh, pspecs), shd.named(mesh, cspecs),
+                          shd.named(mesh, tspec)),
+            out_shardings=(None, shd.named(mesh, cspecs)),
+            donate_argnums=(1,),
+        )
+
+    return jitted

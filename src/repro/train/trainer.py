@@ -1,0 +1,127 @@
+"""Fault-tolerant training loop.
+
+Restart semantics: state (params/opt/err) checkpoints atomically; the data
+pipeline is stateless in the step index; so resume = restore latest + replay
+from that step — no data-loader state, no RNG state files. A run killed at
+any point reproduces the uninterrupted loss trajectory (tested).
+
+Straggler mitigation: a per-step deadline watchdog (EMA of step time x
+tolerance). On a real fleet the hook triggers the controller (re-shard away
+from the slow host / restart it); here the hook records the event and the
+trainer keeps going — the detection path is what is exercised."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from ..ckpt.checkpoint import CheckpointManager
+from ..data.pipeline import DataConfig, SyntheticLM
+from ..dist import sharding as shd
+from ..models.model import Model
+from . import optimizer
+from .train_step import make_train_fns
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 200
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    straggler_tolerance: float = 3.0   # x EMA step time
+    ema_alpha: float = 0.2
+
+
+class Trainer:
+    def __init__(self, model: Model, mesh: Mesh, policy: shd.Policy,
+                 opt_cfg: optimizer.OptConfig, data: SyntheticLM,
+                 cfg: TrainConfig,
+                 straggler_hook: Callable[[int, float, float], None] | None = None):
+        self.model = model
+        self.mesh = mesh
+        self.policy = policy
+        self.data = data
+        self.cfg = cfg
+        self.ckpt = CheckpointManager(cfg.ckpt_dir)
+        self.straggler_hook = straggler_hook or (lambda *a: None)
+        self.straggler_events: list[tuple[int, float, float]] = []
+
+        init_state, jitted_step, state_specs = make_train_fns(
+            model, mesh, policy, opt_cfg)
+        self._init_state = init_state
+        self._make_step = jitted_step
+        self._state_specs = state_specs
+        self.losses: list[tuple[int, float]] = []
+
+    # ------------------------------------------------------------ running
+    def _initial_state(self):
+        """Restore-from-latest if possible (elastic: re-shard to the current
+        mesh), else fresh init."""
+        abstract = jax.eval_shape(
+            self._init_state, jax.random.PRNGKey(self.cfg.seed))
+        specs = self._state_specs(abstract)
+        shardings = shd.named(self.mesh, specs)
+        if self.ckpt.latest_step() is not None:
+            state, step = self.ckpt.restore(abstract, shardings=shardings)
+            return state, step
+        with self.mesh:
+            # init lands directly on the step function's shardings — avoids a
+            # re-compile on the second step (and shards large inits).
+            init = jax.jit(self._init_state, out_shardings=shardings)
+            return init(jax.random.PRNGKey(self.cfg.seed)), 0
+
+    def run(self, until_step: int | None = None,
+            crash_at: int | None = None) -> dict:
+        """Train to ``until_step`` (or cfg.steps). ``crash_at`` simulates an
+        unclean node failure right after that step (for restart tests)."""
+        until = self.cfg.steps if until_step is None else until_step
+        state, start = self._initial_state()
+        batch0 = self.data.batch(0)
+        step_fn = self._make_step(
+            jax.eval_shape(lambda: state), jax.eval_shape(lambda: batch0))
+
+        ema = None
+        first_measured = True
+        with self.mesh:
+            for step in range(start, until):
+                t0 = time.perf_counter()
+                batch = self.data.batch(step)
+                state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+
+                if first_measured:
+                    # step 0 includes XLA compilation — never let it into the
+                    # straggler baseline.
+                    first_measured = False
+                elif ema is None:
+                    ema = dt
+                elif dt > self.cfg.straggler_tolerance * ema:
+                    self.straggler_events.append((step, dt, ema))
+                    self.straggler_hook(step, dt, ema)
+                    ema = ema  # do not pollute the EMA with the outlier
+                else:
+                    ema = (1 - self.cfg.ema_alpha) * ema + self.cfg.ema_alpha * dt
+
+                self.losses.append((step, loss))
+                if (step + 1) % self.cfg.ckpt_every == 0 or step + 1 == until:
+                    self.ckpt.save(step + 1, state)
+                if crash_at is not None and step + 1 >= crash_at:
+                    # Simulated hard failure: no final checkpoint, no cleanup.
+                    return {"crashed_at": step + 1, "losses": self.losses}
+
+        self.ckpt.save(until, state, blocking=True)
+        return {
+            "final_step": until,
+            "losses": self.losses,
+            "final_loss": self.losses[-1][1] if self.losses else None,
+            "straggler_events": self.straggler_events,
+            "state": state,
+        }

@@ -1,0 +1,52 @@
+"""Flit simulator sanity + the Fig. 4 monotonicity it exists to provide."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Evaluator, random_design, spec_16, spec_tiny,
+                        traffic_matrix)
+from repro.core import netsim
+
+
+def test_low_load_delivers_offered_traffic():
+    spec = spec_tiny()
+    f = traffic_matrix(spec, "BP")
+    r = netsim.simulate(spec, spec.mesh_design(), f, inj_scale=0.2,
+                        cycles=2000, warmup=400, seed=0)
+    # At light load, accepted throughput ~= offered (already scale-adjusted).
+    assert r["throughput"] == pytest.approx(r["offered"], rel=0.25)
+    assert np.isfinite(r["mean_latency"])
+    # Latency at least the router pipeline of a 1-hop path.
+    assert r["mean_latency"] >= spec.router_stages
+
+
+def test_saturation_throughput_below_offered():
+    spec = spec_tiny()
+    f = traffic_matrix(spec, "BP")
+    st = netsim.saturation_throughput(spec, spec.mesh_design(), f, cycles=800)
+    assert 0 < st < 32.0
+
+
+def test_fig4_direction_lower_util_higher_throughput():
+    """Designs with clearly lower (U-bar, sigma) should not have clearly
+    worse saturation throughput — the Fig. 4 inverse relation."""
+    spec = spec_16()
+    f = traffic_matrix(spec, "BFS")
+    ev = Evaluator(spec, f)
+    rng = np.random.default_rng(1)
+    designs = [spec.mesh_design()] + [random_design(spec, rng) for _ in range(6)]
+    objs = ev.batch(designs)
+    ok = np.isfinite(objs).all(axis=1)
+    designs = [d for d, o in zip(designs, ok) if o]
+    objs = objs[ok]
+    score = objs[:, 0] + objs[:, 1]  # U-bar + sigma
+    ths = np.array([
+        netsim.saturation_throughput(spec, d, f, scales=(8.0, 16.0), cycles=900)
+        for d in designs
+    ])
+    # Rank correlation between -(U+sigma) and throughput should be positive.
+    a = np.argsort(np.argsort(-score))
+    b = np.argsort(np.argsort(ths))
+    n = len(ths)
+    rho = 1 - 6 * np.sum((a - b) ** 2) / (n * (n**2 - 1))
+    assert rho > 0.0

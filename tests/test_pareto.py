@@ -1,0 +1,100 @@
+"""Property + unit tests for dominance and Pareto hypervolume (HSO)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pareto import (PhvContext, dominates, hypervolume,
+                               pareto_filter, pareto_mask)
+
+
+def _point_sets(max_m=4, max_n=8):
+    return st.integers(1, max_m).flatmap(
+        lambda m: st.lists(
+            st.lists(st.floats(0.0, 1.0, allow_nan=False, width=32),
+                     min_size=m, max_size=m),
+            min_size=1, max_size=max_n,
+        )
+    )
+
+
+def test_dominates_basic():
+    assert dominates(np.array([1.0, 1.0]), np.array([2.0, 2.0]))
+    assert dominates(np.array([1.0, 2.0]), np.array([1.0, 3.0]))
+    assert not dominates(np.array([1.0, 3.0]), np.array([2.0, 2.0]))
+    assert not dominates(np.array([1.0, 1.0]), np.array([1.0, 1.0]))
+
+
+@given(_point_sets())
+@settings(max_examples=60, deadline=None)
+def test_pareto_mask_properties(pts):
+    pts = np.array(pts, dtype=np.float64)
+    mask = pareto_mask(pts)
+    assert mask.any()
+    front = pts[mask]
+    # No front member dominates another.
+    for i in range(front.shape[0]):
+        for j in range(front.shape[0]):
+            if i != j:
+                assert not dominates(front[i], front[j])
+    # Every excluded point is dominated by (or duplicates) a front member.
+    for i in np.flatnonzero(~mask):
+        assert any(
+            dominates(g, pts[i]) or np.array_equal(g, pts[i]) for g in front
+        )
+
+
+def test_hypervolume_box():
+    # Single point: rectangle volume.
+    ref = np.array([1.0, 1.0, 1.0])
+    p = np.array([[0.25, 0.5, 0.75]])
+    assert hypervolume(p, ref) == pytest.approx(0.75 * 0.5 * 0.25)
+
+
+def test_hypervolume_two_points_2d():
+    ref = np.array([1.0, 1.0])
+    pts = np.array([[0.2, 0.6], [0.5, 0.3]])
+    # Union of two rectangles: .8*.4 + .5*.7 - .5*.4
+    assert hypervolume(pts, ref) == pytest.approx(0.8 * 0.4 + 0.5 * 0.7 - 0.5 * 0.4)
+
+
+@given(_point_sets())
+@settings(max_examples=40, deadline=None)
+def test_hv_dominated_point_is_free(pts):
+    pts = np.array(pts, dtype=np.float64)
+    ref = np.full(pts.shape[1], 1.5)
+    base = hypervolume(pts, ref)
+    worst = pts.max(axis=0) + 0.1  # dominated by every point
+    assert hypervolume(np.vstack([pts, worst]), ref) == pytest.approx(base)
+
+
+@given(_point_sets())
+@settings(max_examples=40, deadline=None)
+def test_hv_monotone_under_improvement(pts):
+    pts = np.array(pts, dtype=np.float64)
+    ref = np.full(pts.shape[1], 1.5)
+    base = hypervolume(pts, ref)
+    better = pts.min(axis=0) - 0.1  # dominates every point
+    hv2 = hypervolume(np.vstack([pts, better]), ref)
+    assert hv2 >= base - 1e-12
+
+
+@given(_point_sets())
+@settings(max_examples=30, deadline=None)
+def test_hv_clipping_beyond_ref(pts):
+    pts = np.array(pts, dtype=np.float64)
+    ref = np.full(pts.shape[1], 0.5)
+    hv = hypervolume(pts, ref)
+    assert 0.0 <= hv <= 0.5 ** pts.shape[1] + 1e-9
+
+
+def test_phv_context_mesh_normalization():
+    mesh = np.array([2.0, 4.0, 8.0, 16.0, 32.0])
+    ctx = PhvContext(mesh, (0, 1, 2, 3), ref_scale=1.6)
+    # Mesh normalizes to all-ones; hv = 0.6^4.
+    assert ctx.phv(mesh[None]) == pytest.approx(0.6 ** 4)
+    # A design 20% better in every objective adds volume.
+    assert ctx.phv(mesh[None] * 0.8) > ctx.phv(mesh[None])
+    # phv_with == phv of the union.
+    a, b = mesh * 0.9, mesh * 1.05
+    assert ctx.phv_with(a[None], b) == pytest.approx(ctx.phv(np.vstack([a, b])))

@@ -1,0 +1,124 @@
+"""Search algorithms: Alg. 1 invariants, MOO-STAGE, AMOSA, NSGA-II, PCBB,
+and the regression forest."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CASES, Design, Evaluator, PhvContext, dominates,
+                        random_design, spec_16, spec_tiny, traffic_matrix)
+from repro.core.amosa import amosa
+from repro.core.forest import RegressionForest
+from repro.core.local_search import SearchHistory, local_search
+from repro.core.nsga2 import nsga2
+from repro.core.pcbb import pcbb
+from repro.core.stage import moo_stage
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    spec = spec_tiny()
+    f = traffic_matrix(spec, "BFS")
+    ev = Evaluator(spec, f)
+    ctx = PhvContext(ev(spec.mesh_design()), CASES["case3"])
+    return spec, f, ev, ctx
+
+
+def test_local_search_improves_phv(small_problem):
+    spec, f, ev, ctx = small_problem
+    rng = np.random.default_rng(0)
+    mesh = spec.mesh_design()
+    start_phv = ctx.phv(ev(mesh)[None])
+    res = local_search(spec, ev, ctx, mesh, rng, n_swaps=8, n_link_moves=8,
+                       max_steps=15)
+    assert res.phv >= start_phv
+    # Local set is mutually non-dominated under the active objectives.
+    sub = res.local.objs[:, list(ctx.obj_idx)]
+    for i in range(sub.shape[0]):
+        for j in range(sub.shape[0]):
+            if i != j:
+                assert not dominates(sub[i], sub[j])
+    # Trajectory starts at the start design.
+    assert res.traj[0].key() == mesh.key()
+
+
+def test_moo_stage_beats_mesh(small_problem):
+    spec, f, ev, ctx = small_problem
+    mesh = spec.mesh_design()
+    res = moo_stage(spec, ev, ctx, mesh, seed=0, iters_max=3,
+                    n_swaps=8, n_link_moves=8, max_local_steps=12)
+    assert len(res.global_set.designs) >= 1
+    assert ctx.phv(res.global_set.objs) >= ctx.phv(ev(mesh)[None])
+    # Designs remain structurally valid: perm is a permutation, link budget kept.
+    for d in res.global_set.designs:
+        assert sorted(d.perm.tolist()) == list(range(spec.n_tiles))
+        assert int(np.triu(d.adj).sum()) == spec.n_planar_links
+        assert np.array_equal(d.adj, d.adj.T)
+
+
+def test_moo_stage_history_monotone(small_problem):
+    spec, f, ev, ctx = small_problem
+    hist = SearchHistory(ev, ctx)
+    moo_stage(spec, ev, ctx, spec.mesh_design(), seed=1, iters_max=2,
+              n_swaps=8, n_link_moves=8, max_local_steps=10, history=hist)
+    arr = hist.as_array()
+    if arr.shape[0] > 1:
+        assert np.all(np.diff(arr[:, 2]) <= 1e-12)   # best EDP non-increasing
+        assert np.all(np.diff(arr[:, 1]) >= 0)       # evals non-decreasing
+
+
+def test_amosa_archive_nondominated(small_problem):
+    spec, f, ev, ctx = small_problem
+    arch = amosa(spec, ev, ctx, spec.mesh_design(), seed=0, t_max=0.5,
+                 t_min=0.05, alpha=0.7, iters_per_temp=10, max_evals=200)
+    sub = arch.objs[:, list(ctx.obj_idx)]
+    for i in range(sub.shape[0]):
+        for j in range(sub.shape[0]):
+            if i != j:
+                assert not dominates(sub[i], sub[j])
+
+
+def test_nsga2_runs_and_improves(small_problem):
+    spec, f, ev, ctx = small_problem
+    mesh = spec.mesh_design()
+    ps = nsga2(spec, ev, ctx, mesh, seed=0, pop_size=8, generations=5)
+    assert len(ps.designs) >= 1
+    assert ctx.phv(ps.objs) >= ctx.phv(ev(mesh)[None]) - 1e-9
+
+
+def test_pcbb_finds_design_better_or_equal_mesh(small_problem):
+    spec, f, ev, ctx = small_problem
+    res = pcbb(spec, ev, ctx, seed=0, max_expansions=500)
+    mesh_scal = float(ctx.normalize(ev(spec.mesh_design())).mean())
+    best_scal = float(ctx.normalize(res.best_objs).mean())
+    assert best_scal <= mesh_scal + 1e-9
+    assert res.nodes_expanded > 0
+
+
+def test_regression_forest_fits_smooth_function():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, size=(400, 5))
+    y = x[:, 0] * 2 + np.sin(3 * x[:, 1]) + 0.5 * x[:, 2] ** 2
+    model = RegressionForest(n_trees=16, max_depth=8, seed=0).fit(x, y)
+    pred = model.predict(x)
+    sse = float(np.mean((pred - y) ** 2))
+    var = float(np.var(y))
+    assert sse < 0.2 * var  # explains >80% variance in-sample
+    # Generalizes reasonably.
+    xt = rng.uniform(-1, 1, size=(200, 5))
+    yt = xt[:, 0] * 2 + np.sin(3 * xt[:, 1]) + 0.5 * xt[:, 2] ** 2
+    sse_t = float(np.mean((model.predict(xt) - yt) ** 2))
+    assert sse_t < 0.5 * float(np.var(yt))
+
+
+def test_neighbor_moves_preserve_invariants(small_problem):
+    spec, f, ev, ctx = small_problem
+    from repro.core import sample_neighbors
+    rng = np.random.default_rng(0)
+    d = random_design(spec, rng)
+    for nb in sample_neighbors(spec, d, rng, 10, 10):
+        assert sorted(nb.perm.tolist()) == list(range(spec.n_tiles))
+        assert int(np.triu(nb.adj).sum()) == spec.n_planar_links
+        # planar links only connect same-layer slots
+        iu = np.triu_indices(spec.n_tiles, 1)
+        on = nb.adj[iu]
+        assert np.all(spec.planar_pair_mask[iu][on])

@@ -1,0 +1,238 @@
+"""Substrate tests: data pipeline, optimizer, gradient compression,
+checkpointing (atomic/async/elastic), trainer fault tolerance, serving."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models import build
+from repro.serve import Engine, ServeConfig
+from repro.train import OptConfig, TrainConfig, Trainer
+from repro.train import grad_compress, optimizer
+
+
+# ------------------------------------------------------------------- data
+def test_pipeline_deterministic_and_resumable():
+    d1 = SyntheticLM(DataConfig(vocab=64, seq_len=32, global_batch=4, seed=3))
+    d2 = SyntheticLM(DataConfig(vocab=64, seq_len=32, global_batch=4, seed=3))
+    for step in (0, 7, 123):
+        b1, b2 = d1.batch(step), d2.batch(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        np.testing.assert_array_equal(b1["targets"], b2["targets"])
+    # Different steps differ.
+    assert not np.array_equal(d1.batch(0)["tokens"], d1.batch(1)["tokens"])
+
+
+def test_pipeline_is_learnable_bigram():
+    cfg = DataConfig(vocab=64, seq_len=256, global_batch=2, seed=0,
+                     determinism=0.9)
+    data = SyntheticLM(cfg)
+    b = data.batch(0)
+    # Empirically, the deterministic successor should be hit ~90% of the time
+    hits = tot = 0
+    for row_t, row_y, row_m in zip(b["tokens"], b["targets"], b["mask"]):
+        for t, y, m in zip(row_t, row_y, row_m):
+            if m and t != cfg.bos:
+                tot += 1
+                hits += int(data.successor[t] == y)
+    assert hits / tot > 0.8
+    assert 0 < data.entropy_floor() < np.log(cfg.vocab)
+
+
+# -------------------------------------------------------------- optimizer
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([4.0, -3.0])}
+    state = optimizer.init_state(params)
+    cfg = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=200)
+
+    def loss(p):
+        return jnp.sum((p["w"] - 1.0) ** 2)
+
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, stats = optimizer.apply(cfg, params, g, state)
+    assert float(loss(params)) < 1e-2
+    assert float(stats["grad_norm"]) >= 0
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros(3)}
+    state = optimizer.init_state(params)
+    cfg = OptConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0, warmup_steps=0)
+    g = {"w": jnp.full(3, 1e6)}
+    p2, state, stats = optimizer.apply(cfg, params, g, state)
+    assert float(stats["grad_norm"]) > 1e5
+    assert np.all(np.abs(np.asarray(p2["w"])) < 10.0)  # clipped update
+
+
+# -------------------------------------------------------- grad compression
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(512) * 0.01)
+    err = jnp.zeros(512)
+    q, scale, new_err = grad_compress.quantize(g, err)
+    assert q.dtype == jnp.int8
+    deq = np.asarray(q, np.float32) * float(scale)
+    np.testing.assert_allclose(deq + np.asarray(new_err), np.asarray(g),
+                               atol=1e-7)
+    assert np.max(np.abs(np.asarray(new_err))) <= float(scale) * 0.51
+
+
+def test_error_feedback_preserves_signal():
+    """Over many steps, sum of dequantized gradients tracks the true sum."""
+    rng = np.random.default_rng(1)
+    err = jnp.zeros(64)
+    true_sum = np.zeros(64)
+    deq_sum = np.zeros(64)
+    last_scale = 0.0
+    for _ in range(50):
+        g = jnp.asarray(rng.standard_normal(64) * 0.1)
+        q, scale, err = grad_compress.quantize(g, err)
+        true_sum += np.asarray(g)
+        deq_sum += np.asarray(q, np.float32) * float(scale)
+        last_scale = float(scale)
+    np.testing.assert_allclose(deq_sum, true_sum, atol=2 * last_scale)
+
+
+# ----------------------------------------------------------- checkpointing
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+    mgr.save(10, tree, blocking=True)
+    mgr.save(20, tree, blocking=True)
+    mgr.save(30, tree, blocking=True)
+    assert mgr.all_steps() == [20, 30]  # keep=2 gc'd step 10
+    # A stale tmp file (simulated crash mid-save) is ignored.
+    open(os.path.join(str(tmp_path), "tmp.99"), "w").write("junk")
+    restored, step = mgr.restore(jax.eval_shape(lambda: tree))
+    assert step == 30
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Restore against explicit shardings (the elastic-resume path)."""
+    mesh = make_host_mesh()
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    mgr.save(1, tree, blocking=True)
+    specs = {"w": jax.sharding.PartitionSpec("data", None)}
+    restored, _ = mgr.restore(
+        jax.eval_shape(lambda: tree), shardings=shd.named(mesh, specs))
+    assert restored["w"].sharding.spec == specs["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+# ----------------------------------------------------------------- trainer
+def _small_setup(tmp_path, steps=24, grad_compress_on=False):
+    cfg = get_config("yi-6b", smoke=True).scaled(
+        remat=False, compute_dtype=jnp.float32)
+    model = build(cfg)
+    mesh = make_host_mesh()
+    policy = shd.Policy(microbatches=1, grad_compress=grad_compress_on)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                  global_batch=8, seed=0))
+    opt = OptConfig(lr=1e-2, warmup_steps=5, total_steps=steps,
+                    weight_decay=0.0)
+    tcfg = TrainConfig(steps=steps, ckpt_dir=str(tmp_path), ckpt_every=8,
+                       seed=0)
+    return Trainer(model, mesh, policy, opt, data, tcfg)
+
+
+def test_trainer_loss_decreases(tmp_path):
+    tr = _small_setup(tmp_path / "a", steps=30)
+    out = tr.run()
+    losses = [l for _, l in out["losses"]]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3
+    assert out["final_step"] == 30
+
+
+def test_trainer_crash_restart_resumes_trajectory(tmp_path):
+    # Uninterrupted reference run.
+    ref = _small_setup(tmp_path / "ref", steps=20)
+    ref_out = ref.run()
+    ref_losses = dict(ref_out["losses"])
+
+    # Crash at step 12 (after the step-8 checkpoint), then restart.
+    tr1 = _small_setup(tmp_path / "crash", steps=20)
+    out1 = tr1.run(crash_at=12)
+    assert out1["crashed_at"] == 12
+    tr2 = _small_setup(tmp_path / "crash", steps=20)
+    out2 = tr2.run()
+    # Resumed from step 8 checkpoint; losses from there match the reference.
+    resumed = dict(out2["losses"])
+    assert min(resumed) == 8  # resumed at the checkpoint step
+    for s in range(10, 20):
+        assert resumed[s] == pytest.approx(ref_losses[s], rel=1e-4), \
+            f"divergence at step {s}"
+
+
+def test_trainer_straggler_detection(tmp_path):
+    tr = _small_setup(tmp_path / "strag", steps=14)
+    orig = tr.data.batch
+
+    def slow_batch(step):
+        if step == 9:
+            time.sleep(1.0)
+        return orig(step)
+
+    tr.data.batch = slow_batch
+    out = tr.run()
+    assert any(s == 9 for s, _, _ in out["straggler_events"]), \
+        f"straggler at step 9 not detected: {out['straggler_events']}"
+
+
+def test_trainer_grad_compress_converges(tmp_path):
+    tr = _small_setup(tmp_path / "gc", steps=30, grad_compress_on=True)
+    out = tr.run()
+    losses = [l for _, l in out["losses"]]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3
+
+
+# ----------------------------------------------------------------- serving
+def test_engine_generates_deterministic_tokens():
+    cfg = get_config("yi-6b", smoke=True).scaled(
+        remat=False, compute_dtype=jnp.float32)
+    model = build(cfg)
+    mesh = make_host_mesh()
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, mesh, shd.Policy(), params,
+                 ServeConfig(max_new_tokens=8, max_len=64))
+    prompts = np.array([[5, 6, 7, 8], [9, 10, 11, 12]], dtype=np.int32)
+    out1 = eng.generate(prompts)
+    out2 = eng.generate(prompts)
+    assert out1.shape == (2, 8)
+    np.testing.assert_array_equal(out1, out2)
+    assert np.all(out1 >= 0) and np.all(out1 < cfg.vocab)
+
+
+# ---------------------------------------------------------------- sharding
+def test_param_specs_divisibility_fallback():
+    mesh = make_host_mesh()  # (1, 1) on this container -> everything fits
+    cfg = get_config("whisper-base", smoke=True)
+    model = build(cfg)
+    abstract = model.abstract_params()
+    specs = shd.param_specs(mesh, shd.Policy(), abstract)
+    leaves = jax.tree.leaves(specs,
+                             is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert leaves  # produced a spec per leaf without error
+
+
+def test_spec_from_logical_drops_nondivisible():
+    import jax.sharding as jsh
+    devs = jax.devices()
+    mesh = jax.sharding.Mesh(np.array(devs).reshape(1, 1), ("data", "model"))
+    pol = shd.Policy()
+    # vocab 51865 is not divisible by any axis > 1; on this 1x1 mesh the
+    # axis trivially fits, so instead check the helper logic directly.
+    assert shd._fit(mesh, 7, ("model",), set()) in ((), ("model",))

@@ -1,0 +1,58 @@
+"""The §3 traffic study statistics, asserted for every application x size."""
+
+import numpy as np
+import pytest
+
+from repro.core import (APP_NAMES, avg_traffic, spec_36, spec_64,
+                        traffic_matrix)
+from repro.core.traffic import traffic_stats
+
+
+@pytest.mark.parametrize("spec_fn", [spec_36, spec_64])
+@pytest.mark.parametrize("app", APP_NAMES)
+def test_traffic_matches_paper_observations(spec_fn, app):
+    spec = spec_fn()
+    f = traffic_matrix(spec, app)
+    s = traffic_stats(spec, f)
+    # >80% of traffic is LLC-associated (paper Fig. 2).
+    assert s["llc_share"] > 0.80
+    # One master CPU carries the majority of CPU traffic (paper §3).
+    assert s["master_cpu_share"] > 0.5
+    # GPU->LLC traffic is near-uniform across GPUs (coefficient of variation).
+    assert s["gpu_llc_cv"] < 0.5
+    # No self traffic, non-negative.
+    assert np.all(np.diag(f) == 0) and np.all(f >= 0)
+
+
+def test_apps_are_similar_but_not_identical():
+    spec = spec_64()
+    mats = [traffic_matrix(spec, a) for a in APP_NAMES]
+    normed = [m / m.sum() for m in mats]
+    # Pairwise cosine similarity: high (architecture-dominated traffic)...
+    sims = []
+    for i in range(len(normed)):
+        for j in range(i + 1, len(normed)):
+            a, b = normed[i].ravel(), normed[j].ravel()
+            sims.append(a @ b / (np.linalg.norm(a) * np.linalg.norm(b)))
+    assert min(sims) > 0.8
+    # ...but not literally the same matrices.
+    assert max(
+        np.abs(normed[0] - normed[k]).max() for k in range(1, len(normed))
+    ) > 1e-6
+
+
+def test_avg_traffic_is_normalized_mixture():
+    spec = spec_36()
+    apps = list(APP_NAMES[:4])
+    m = avg_traffic(spec, apps)
+    assert m.shape == (spec.n_tiles, spec.n_tiles)
+    assert np.all(m >= 0)
+    s = traffic_stats(spec, m)
+    assert s["llc_share"] > 0.80
+
+
+def test_traffic_deterministic():
+    spec = spec_64()
+    a = traffic_matrix(spec, "BFS")
+    b = traffic_matrix(spec, "BFS")
+    np.testing.assert_array_equal(a, b)
