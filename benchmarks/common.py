@@ -11,9 +11,13 @@ from repro.core import (CASES, Evaluator, PhvContext, SystemSpec,
 from repro.core.local_search import SearchHistory
 
 
-def problem(spec: SystemSpec, app: str, case: str):
+def problem(spec: SystemSpec, app: str, case: str, backend: str = "auto"):
+    """Evaluator + PHV context + mesh start for one (spec, app, case).
+
+    ``backend`` selects the batched-APSP routing backend ("auto" resolves
+    to the Pallas kernel on TPU, jnp elsewhere — see core.routing)."""
     f = traffic_matrix(spec, app)
-    ev = Evaluator(spec, f)
+    ev = Evaluator(spec, f, backend=backend)
     mesh = spec.mesh_design()
     ctx = PhvContext(ev(mesh), CASES[case])
     return ev, ctx, mesh

@@ -11,10 +11,10 @@ from repro.core.stage import moo_stage
 from .common import Timer, problem, row, spec_16, spec_36
 
 
-def main(reduced: bool = False) -> None:
+def main(reduced: bool = False, backend: str = "auto") -> None:
     spec = spec_16() if reduced else spec_36()
     for case in ("case1", "case2", "case3"):
-        ev, ctx, mesh = problem(spec, "BFS", case)
+        ev, ctx, mesh = problem(spec, "BFS", case, backend=backend)
         with Timer() as t:
             res = moo_stage(spec, ev, ctx, mesh, seed=0,
                             iters_max=5 if reduced else 10,

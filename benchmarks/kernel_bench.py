@@ -1,14 +1,22 @@
 """Framework-side microbenchmarks: batched design evaluation throughput
 (the optimizer's hot loop the Pallas kernels target), PHV computation, and
 the flit simulator. On this CPU container the jnp reference paths execute;
-the same entry points run the Pallas kernels on TPU."""
+the same entry points run the Pallas kernels on TPU (Evaluator
+backend="auto" resolves per platform).
+
+Emits BENCH_netsim.json next to the repo root with the simulator
+vectorized-vs-reference numbers so CHANGES.md entries can cite them."""
 
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
 from repro.core import Evaluator, hypervolume, random_design, spec_36, spec_64, traffic_matrix
 from repro.core import netsim
+from repro.core.pareto import hypervolume_with_batch
 
 from .common import Timer, row
 
@@ -22,18 +30,57 @@ def main(reduced: bool = False) -> None:
     ev.batch(designs[:8])  # warm compile
     with Timer() as t:
         ev.batch(designs)
-    row("eval_batch64", t.dt / 64 * 1e6, f"designs_per_s={64/t.dt:.1f}")
+    row("eval_batch64", t.dt / 64 * 1e6,
+        f"designs_per_s={64/t.dt:.1f};backend={ev.backend}")
 
     pts = rng.uniform(size=(24, 4))
     with Timer() as t:
         for _ in range(50):
             hypervolume(pts, np.full(4, 1.5))
-    row("phv_24pts_4obj", t.dt / 50 * 1e6, "hso_recursive")
+    row("phv_24pts_4obj", t.dt / 50 * 1e6, "hso_recursive+2d_staircase")
+
+    # Batched greedy scoring: PHV(S ∪ {d}) for a whole neighborhood.
+    cands = rng.uniform(size=(48, 4)) * 1.4
+    with Timer() as t:
+        for _ in range(20):
+            hypervolume_with_batch(pts, cands, np.full(4, 1.5))
+    row("phv_with_batch48", t.dt / 20 * 1e6, "excl_contributions")
 
     d = spec.mesh_design()
+    bench = {"spec": spec.n_tiles, "cycles": 1000}
+    netsim.clear_caches()
     with Timer() as t:
         netsim.simulate(spec, d, f, cycles=1000, warmup=200)
     row("netsim_1kcycles", t.dt * 1e6, f"cycles_per_s={1000/t.dt:.0f}")
+    bench["vectorized_cold_us"] = t.dt * 1e6
+    with Timer() as t:
+        netsim.simulate(spec, d, f, cycles=1000, warmup=200)
+    row("netsim_1kcycles_warm", t.dt * 1e6,
+        f"cycles_per_s={1000/t.dt:.0f};cached_tables")
+    bench["vectorized_warm_us"] = t.dt * 1e6
+    with Timer() as t:
+        netsim.simulate_reference(spec, d, f, cycles=1000, warmup=200)
+    row("netsim_reference_1kcycles", t.dt * 1e6,
+        f"cycles_per_s={1000/t.dt:.0f};legacy_loop")
+    bench["reference_us"] = t.dt * 1e6
+    bench["speedup_cold"] = bench["reference_us"] / bench["vectorized_cold_us"]
+    bench["speedup_warm"] = bench["reference_us"] / bench["vectorized_warm_us"]
+
+    # Batched sweep: designs x scales amortize tables + the cycle loop.
+    sweep = [spec.mesh_design()] + [random_design(spec, rng) for _ in range(7)]
+    scales = tuple(s / max(f.sum(), 1e-9) for s in (4.0, 16.0))
+    n_sims = len(sweep) * len(scales)
+    with Timer() as t:
+        netsim.simulate_batch(spec, sweep, f, scales=scales,
+                              cycles=1000, warmup=250)
+    row("netsim_batch16x1k", t.dt / n_sims * 1e6,
+        f"sims={n_sims};sims_per_s={n_sims/t.dt:.1f}")
+    bench["batch_us_per_sim"] = t.dt / n_sims * 1e6
+
+    out = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                       "BENCH_netsim.json")
+    with open(out, "w") as fh:
+        json.dump(bench, fh, indent=2)
 
 
 if __name__ == "__main__":

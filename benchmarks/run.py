@@ -11,7 +11,16 @@ import time
 
 def main() -> None:
     reduced = "--full" not in sys.argv
-    print(f"# repro benchmarks (reduced={reduced})")
+    # Routing backend for the search benchmarks (fig4/fig8/table2):
+    # --backend=jnp|pallas|auto. Validated up front so a typo fails fast
+    # instead of surfacing as per-module ERROR rows.
+    backend = "auto"
+    for arg in sys.argv[1:]:
+        if arg.startswith("--backend="):
+            backend = arg.split("=", 1)[1]
+    from repro.core import routing
+    routing.resolve_backend(backend)  # raises ValueError on typos
+    print(f"# repro benchmarks (reduced={reduced}, backend={backend})")
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
 
@@ -19,13 +28,15 @@ def main() -> None:
                    fig9_agnostic, fig10_thermal, kernel_bench,
                    roofline_bench, table2_speedup)
 
+    takes_backend = (fig4_throughput_model, fig8_eval_error, table2_speedup)
     for mod in (kernel_bench, fig4_throughput_model, fig6_convergence,
                 table2_speedup, fig8_eval_error, fig9_agnostic,
                 fig10_thermal, roofline_bench):
         name = mod.__name__.rsplit(".", 1)[-1]
         t = time.perf_counter()
+        kwargs = {"backend": backend} if mod in takes_backend else {}
         try:
-            mod.main(reduced=reduced)
+            mod.main(reduced=reduced, **kwargs)
         except Exception as e:  # pragma: no cover — keep the suite running
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
         print(f"# {name} took {time.perf_counter()-t:.1f}s", flush=True)

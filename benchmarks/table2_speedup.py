@@ -26,8 +26,9 @@ def evals_to_reach(hist: SearchHistory, target: float) -> float:
 
 
 def speedup(spec, app: str, case: str, stage_budget: int,
-            amosa_budget: int, seed: int = 0) -> float:
-    ev, ctx, mesh = problem(spec, app, case)
+            amosa_budget: int, seed: int = 0,
+            backend: str = "auto") -> float:
+    ev, ctx, mesh = problem(spec, app, case, backend=backend)
     h_stage = SearchHistory(ev, ctx)
     moo_stage(spec, ev, ctx, mesh, seed=seed, iters_max=6, n_swaps=12,
               n_link_moves=12, max_local_steps=stage_budget, history=h_stage)
@@ -37,7 +38,7 @@ def speedup(spec, app: str, case: str, stage_budget: int,
     best = arr[:, 2].min()
     evals_stage = evals_to_reach(h_stage, best)
 
-    ev2, ctx2, mesh2 = problem(spec, app, case)
+    ev2, ctx2, mesh2 = problem(spec, app, case, backend=backend)
     h_amosa = SearchHistory(ev2, ctx2)
     amosa(spec, ev2, ctx2, mesh2, seed=seed, t_max=1.0, t_min=1e-4,
           alpha=0.92, iters_per_temp=40, max_evals=amosa_budget,
@@ -48,7 +49,7 @@ def speedup(spec, app: str, case: str, stage_budget: int,
     return evals_amosa / max(evals_stage, 1.0)
 
 
-def main(reduced: bool = False) -> None:
+def main(reduced: bool = False, backend: str = "auto") -> None:
     spec = spec_16() if reduced else spec_36()
     apps = APP_NAMES[:3] if reduced else APP_NAMES
     cases = {"case1": "two-obj", "case2": "three-obj", "case3": "four-obj"}
@@ -58,7 +59,8 @@ def main(reduced: bool = False) -> None:
             for app in apps:
                 sps.append(speedup(spec, app, case,
                                    stage_budget=50 if reduced else 120,
-                                   amosa_budget=1500 if reduced else 4000))
+                                   amosa_budget=1500 if reduced else 4000,
+                                   backend=backend))
         sps = [s for s in sps if np.isfinite(s)]
         row(f"table2_amosa_{label}", t.dt / max(len(apps), 1) * 1e6,
             f"mean_speedup={np.mean(sps):.1f}x;min={np.min(sps):.1f};"

@@ -3,9 +3,14 @@
 The paper evaluates candidates one at a time on a Xeon; we reformulate the
 whole objective stack (routing + Eqs. 1-10) as a fixed-shape JAX program and
 evaluate entire neighborhoods in one jitted, vmapped batch (DESIGN.md §4).
-On TPU the two inner hot spots can be served by Pallas kernels
-(kernels/minplus, kernels/link_util); the jnp path is the reference and the
-CPU execution path.
+
+The routing hot spot (batched APSP) is threaded through the backend switch
+in core.routing: ``Evaluator(spec, f, backend="auto"|"jnp"|"pallas")``. On
+TPU the blocked Pallas min-plus kernel (kernels/minplus.apsp) serves the
+whole candidate batch without materializing the (N, N, N) jnp broadcast per
+design; the jnp path is the oracle and the CPU execution path. The rest of
+the objective stack (path walk + Eqs. 1-10) stays one jitted vmap over the
+batch, consuming the precomputed (dist, next-hop) tables.
 """
 
 from __future__ import annotations
@@ -16,21 +21,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .objectives import N_OBJ, SpecConsts, evaluate_design, make_consts
+from . import routing
+from .objectives import (N_OBJ, SpecConsts, design_cost, evaluate_with_tables,
+                         make_consts)
 from .problem import Design, SystemSpec
 
 
 class Evaluator:
     """Jitted batched evaluator for a fixed (spec, traffic) pair.
 
-    Batches are padded to the next power of two to bound recompiles."""
+    Batches are padded to the next power of two to bound recompiles.
 
-    def __init__(self, spec: SystemSpec, f: np.ndarray):
+    ``backend`` selects the batched-APSP implementation (see core.routing):
+    ``"auto"`` (default) resolves to the Pallas kernel on TPU and jnp
+    elsewhere. ``interpret=True`` forces the Pallas kernel through the
+    interpreter — CPU-only correctness testing of the TPU path."""
+
+    def __init__(self, spec: SystemSpec, f: np.ndarray, *,
+                 backend: str = "auto", interpret: bool = False):
         self.spec = spec
+        self.backend = routing.resolve_backend(backend)
+        self.interpret = interpret
         self.consts: SpecConsts = make_consts(spec)
         self.f = jnp.asarray(f, jnp.float32)
-        self._batched = jax.jit(
-            jax.vmap(partial(evaluate_design, self.consts), in_axes=(0, 0, None))
+        self._cost_fn = jax.jit(jax.vmap(partial(design_cost, self.consts)))
+        self._eval_fn = jax.jit(
+            jax.vmap(partial(evaluate_with_tables, self.consts),
+                     in_axes=(0, 0, None, 0, 0))
         )
         self.n_evals = 0  # evaluation counter (search-cost accounting)
 
@@ -50,7 +67,12 @@ class Evaluator:
         pad = 1 << max(0, (b - 1).bit_length())
         perms = np.stack([d.perm for d in designs] + [designs[-1].perm] * (pad - b))
         adjs = np.stack([d.adj for d in designs] + [designs[-1].adj] * (pad - b))
-        objs, aux = self._batched(jnp.asarray(perms), jnp.asarray(adjs), self.f)
+        perms_j, adjs_j = jnp.asarray(perms), jnp.asarray(adjs)
+        costs = self._cost_fn(adjs_j)
+        dist, nh = routing.routing_tables_batched(
+            costs, self.consts.apsp_iters,
+            backend=self.backend, interpret=self.interpret)
+        objs, aux = self._eval_fn(perms_j, adjs_j, self.f, dist, nh)
         self.n_evals += b
         aux = {k: np.asarray(v[:b]) for k, v in aux.items()}
         return np.asarray(objs[:b], dtype=np.float64), aux

@@ -80,8 +80,9 @@ def local_search(
         if not cands:
             break
         objs = ev.batch(cands)
-        # argmax_d PHV(S_local ∪ {d}) — Alg. 1 line 3.
-        phvs = np.array([ctx.phv_with(s_local.objs, o) for o in objs])
+        # argmax_d PHV(S_local ∪ {d}) — Alg. 1 line 3, scored for the whole
+        # neighborhood in one batched exclusive-contribution pass.
+        phvs = ctx.phv_with_batch(s_local.objs, objs)
         j = int(np.argmax(phvs))
         if phvs[j] <= phv_curr + 1e-12:
             break

@@ -16,6 +16,7 @@ calibration (tools unavailable offline; DESIGN.md §5).
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax.numpy as jnp
@@ -65,6 +66,7 @@ class SpecConsts(NamedTuple):
     n_layers: int
 
 
+@functools.lru_cache(maxsize=64)
 def make_consts(spec: SystemSpec) -> SpecConsts:
     col = spec.coords[:, 1] * spec.ny + spec.coords[:, 2]
     return SpecConsts(
@@ -80,10 +82,21 @@ def make_consts(spec: SystemSpec) -> SpecConsts:
         router_stages=spec.router_stages,
         max_hops=spec.max_hops,
         n_links=spec.n_links,
-        apsp_iters=int(np.ceil(np.log2(spec.n_tiles))) + 1,
+        apsp_iters=routing.apsp_iters(spec.n_tiles),
         n_columns=spec.tiles_per_layer,
         n_layers=spec.n_layers,
     )
+
+
+def design_cost(c: SpecConsts, adj: jnp.ndarray) -> jnp.ndarray:
+    """(N, N) hop-cost matrix of a design: router pipeline + wire delay on
+    present links, INF on absent ones, 0 on the diagonal. The batched
+    evaluator stacks these and runs APSP through the selected routing
+    backend (core.routing.routing_tables_batched)."""
+    n = adj.shape[-1]
+    full_adj = adj | c.vadj
+    cost = jnp.where(full_adj, c.router_stages + c.link_delay, routing.INF)
+    return jnp.where(jnp.eye(n, dtype=bool), 0.0, cost)
 
 
 def evaluate_design(
@@ -92,16 +105,32 @@ def evaluate_design(
     adj: jnp.ndarray,    # (N, N) bool planar links
     f: jnp.ndarray,      # (Ncores, Ncores) traffic between CORES
 ):
-    """All five objectives + validity for one design. jit/vmap friendly."""
+    """All five objectives + validity for one design. jit/vmap friendly.
+
+    Single-design reference path: routing tables are computed inline with
+    the jnp oracle. The Evaluator hot loop instead batches APSP across the
+    candidate set (optionally on the Pallas backend) and calls
+    :func:`evaluate_with_tables`."""
+    cost = design_cost(c, adj)
+    dist, nh = routing.routing_tables(cost, c.apsp_iters)
+    return evaluate_with_tables(c, perm, adj, f, dist, nh)
+
+
+def evaluate_with_tables(
+    c: SpecConsts,
+    perm: jnp.ndarray,   # (N,) slot -> core id
+    adj: jnp.ndarray,    # (N, N) bool planar links
+    f: jnp.ndarray,      # (Ncores, Ncores) traffic between CORES
+    dist: jnp.ndarray,   # (N, N) APSP distances for this design
+    nh: jnp.ndarray,     # (N, N) int32 next hops for this design
+):
+    """Objectives given precomputed routing tables (Eqs. 1-10)."""
     n = perm.shape[0]
     full_adj = adj | c.vadj
     # Traffic between SLOTS under this placement.
     f_slots = f[perm][:, perm] * (1.0 - jnp.eye(n))
 
     # ---- routing ---------------------------------------------------- Eq. 1
-    cost = jnp.where(full_adj, c.router_stages + c.link_delay, routing.INF)
-    cost = jnp.where(jnp.eye(n, dtype=bool), 0.0, cost)
-    dist, nh = routing.routing_tables(cost, c.apsp_iters)
     hops, delay, util_d, visits, all_done = routing.walk_paths(
         nh, c.link_delay, f_slots.astype(jnp.float32), c.max_hops
     )

@@ -17,16 +17,49 @@ walk over all N^2 pairs accumulates, in one pass:
   * per-pair hop count h_ij and wire delay d_ij     (Eq. 1),
   * f-weighted directed link utilization U          (Eq. 2),
   * f-weighted router visit counts                  (Eq. 8).
+
+Routing backends
+----------------
+The batched entry points (:func:`apsp_batched`,
+:func:`routing_tables_batched`) accept ``backend``:
+
+  * ``"jnp"``    — vmapped jnp min-plus squaring; the oracle and the CPU
+                   execution path. Materializes an (N, N, N) broadcast per
+                   design.
+  * ``"pallas"`` — the blocked VMEM-tiled kernel in kernels/minplus; the
+                   TPU hot path of core.evaluate.Evaluator. ``interpret=True``
+                   runs it through the Pallas interpreter on CPU (tests).
+  * ``"auto"``   — ``"pallas"`` on TPU, ``"jnp"`` elsewhere (the default).
 """
 
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 INF = 1.0e9
+
+BACKENDS = ("auto", "jnp", "pallas")
+
+
+def apsp_iters(n_tiles: int) -> int:
+    """Min-plus squaring iterations guaranteeing APSP convergence for an
+    N-node graph (single source of truth for the analytical evaluator and
+    the flit simulator's host-side tables)."""
+    return math.ceil(math.log2(n_tiles)) + 1
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Resolve ``backend`` (or the default ``"auto"``) to a concrete one."""
+    b = backend if backend is not None else "auto"
+    if b not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {b!r}")
+    if b == "auto":
+        b = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return b
 
 
 def min_plus(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -112,3 +145,40 @@ def routing_tables(cost: jnp.ndarray, n_iters: int):
     """Convenience: (dist, next_hop) from a hop-cost matrix."""
     dist = apsp(cost, n_iters)
     return dist, next_hop(cost, dist)
+
+
+# ----------------------------------------------------------------- batched
+@partial(jax.jit, static_argnames=("n_iters",))
+def _apsp_batched_jnp(cost: jnp.ndarray, n_iters: int) -> jnp.ndarray:
+    return jax.vmap(lambda c: apsp(c, n_iters))(cost)
+
+
+_next_hop_batched = jax.jit(jax.vmap(next_hop))
+
+
+def apsp_batched(
+    cost: jnp.ndarray,  # (B, N, N)
+    n_iters: int,
+    *,
+    backend: str | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Batched APSP over a stack of cost matrices on the selected backend."""
+    if resolve_backend(backend) == "pallas":
+        from ..kernels import minplus as _minplus  # deferred: keeps core importable sans kernels
+
+        return _minplus.apsp(cost, n_iters, interpret=interpret)
+    return _apsp_batched_jnp(cost, n_iters)
+
+
+def routing_tables_batched(
+    cost: jnp.ndarray,  # (B, N, N)
+    n_iters: int,
+    *,
+    backend: str | None = None,
+    interpret: bool = False,
+):
+    """Batched (dist, next_hop). APSP runs on ``backend``; the argmin-based
+    next-hop extraction is cheap and always runs on the jnp path."""
+    dist = apsp_batched(cost, n_iters, backend=backend, interpret=interpret)
+    return dist, _next_hop_batched(cost, dist)

@@ -11,6 +11,12 @@ lowering).
 
 Block sizes keep the (bm, bk, bn) broadcast intermediate within VMEM:
 128 x 32 x 128 x 4 B = 2 MiB.
+
+This module is the ``backend="pallas"`` implementation behind
+core.routing.apsp_batched / routing_tables_batched; core.evaluate.Evaluator
+threads its batched candidate APSP through that switch (``"auto"`` selects
+this kernel on TPU, the jnp oracle elsewhere; ``interpret=True`` runs it on
+CPU for tests).
 """
 
 from __future__ import annotations

@@ -14,7 +14,12 @@ from repro.kernels.ssd import ssd
 
 
 # ------------------------------------------------------------------ minplus
-@pytest.mark.parametrize("bsz,n", [(1, 8), (2, 16), (1, 36), (2, 64), (1, 70)])
+@pytest.mark.parametrize(
+    "bsz,n",
+    [(1, 8), (2, 16), (1, 36), (2, 64), (1, 70),
+     # odd / prime / above-one-block sizes exercising the +INF padding
+     (1, 33), (3, 37), (1, 129)],
+)
 def test_minplus_matches_ref(bsz, n):
     rng = np.random.default_rng(n)
     a = rng.uniform(0, 10, size=(bsz, n, n)).astype(np.float32)
@@ -33,6 +38,44 @@ def test_minplus_with_inf_edges():
     got = minplus(jnp.asarray(a), jnp.asarray(a), interpret=True)
     want = ref.minplus_ref(jnp.asarray(a), jnp.asarray(a))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_routing_backend_switch_pallas_matches_jnp():
+    """routing_tables_batched(backend="pallas") == the jnp oracle on an
+    odd-N (36-tile) spec — the evaluator's TPU hot path, interpreted."""
+    import numpy as np_
+    from repro.core import random_design, spec_36
+    from repro.core import routing
+    from repro.core.objectives import design_cost, make_consts
+
+    spec = spec_36()
+    c = make_consts(spec)
+    rng = np_.random.default_rng(2)
+    adjs = jnp.asarray(np_.stack(
+        [spec.mesh_design().adj, random_design(spec, rng).adj]))
+    costs = jax.vmap(lambda a: design_cost(c, a))(adjs)
+    dist_j, nh_j = routing.routing_tables_batched(
+        costs, c.apsp_iters, backend="jnp")
+    dist_p, nh_p = routing.routing_tables_batched(
+        costs, c.apsp_iters, backend="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(dist_p), np.asarray(dist_j),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(nh_p), np.asarray(nh_j))
+
+
+def test_evaluator_backend_switch_matches_jnp():
+    """Evaluator(backend="pallas", interpret=True) reproduces the jnp
+    objective rows end-to-end (validity masking included)."""
+    from repro.core import Evaluator, random_design, spec_tiny, traffic_matrix
+
+    spec = spec_tiny()
+    f = traffic_matrix(spec, "BFS")
+    rng = np.random.default_rng(1)
+    designs = [spec.mesh_design()] + [random_design(spec, rng)
+                                      for _ in range(3)]
+    objs_j = Evaluator(spec, f, backend="jnp").batch(designs)
+    objs_p = Evaluator(spec, f, backend="pallas", interpret=True).batch(designs)
+    np.testing.assert_allclose(objs_p, objs_j, rtol=1e-5, atol=1e-6)
 
 
 def test_minplus_apsp_converges_to_routing_apsp():

@@ -1,4 +1,6 @@
-"""Flit simulator sanity + the Fig. 4 monotonicity it exists to provide."""
+"""Flit simulator sanity + the Fig. 4 monotonicity it exists to provide,
+plus golden-equivalence pins of the vectorized engine against the legacy
+reference loop (same seed -> identical statistics)."""
 
 import numpy as np
 import pytest
@@ -6,6 +8,113 @@ import pytest
 from repro.core import (Evaluator, random_design, spec_16, spec_tiny,
                         traffic_matrix)
 from repro.core import netsim
+
+
+def _assert_same_result(got: dict, want: dict):
+    assert got["delivered"] == want["delivered"]
+    for k in ("throughput", "offered", "mean_latency", "p99_latency"):
+        g, w = float(got[k]), float(want[k])
+        if np.isinf(w):
+            assert np.isinf(g)
+        else:
+            assert g == pytest.approx(w, rel=1e-12, abs=1e-12), k
+
+
+@pytest.mark.parametrize("spec_fn,app", [(spec_tiny, "BP"), (spec_16, "BFS")])
+@pytest.mark.parametrize("load", ["light", "saturated"])
+def test_vectorized_engine_matches_reference_loop(spec_fn, app, load):
+    """Same seed -> same delivered count and latency stats as the legacy
+    per-cycle/per-edge Python loop, on mesh and irregular designs."""
+    spec = spec_fn()
+    f = traffic_matrix(spec, app)
+    scale = 0.4 if load == "light" else 12.0 / max(f.sum(), 1e-9)
+    rng = np.random.default_rng(5)
+    for d in (spec.mesh_design(), random_design(spec, rng)):
+        for seed in (0, 3):
+            got = netsim.simulate(spec, d, f, inj_scale=scale,
+                                  cycles=600, warmup=120, seed=seed)
+            want = netsim.simulate_reference(spec, d, f, inj_scale=scale,
+                                             cycles=600, warmup=120,
+                                             seed=seed)
+            _assert_same_result(got, want)
+
+
+def test_simulate_batch_matches_individual_runs():
+    spec = spec_tiny()
+    f = traffic_matrix(spec, "BP")
+    rng = np.random.default_rng(9)
+    designs = [spec.mesh_design(), random_design(spec, rng)]
+    scales, seeds = (0.5, 2.0), (0, 4)
+    r = netsim.simulate_batch(spec, designs, f, scales=scales, seeds=seeds,
+                              cycles=400, warmup=100)
+    assert r["throughput"].shape == (2, 2, 2)
+    for di, d in enumerate(designs):
+        for si, s in enumerate(scales):
+            for ki, seed in enumerate(seeds):
+                want = netsim.simulate(spec, d, f, inj_scale=s, cycles=400,
+                                       warmup=100, seed=seed)
+                got = {k: v[di, si, ki] for k, v in r.items()}
+                _assert_same_result(got, want)
+
+
+def test_zero_traffic_returns_idle_network():
+    """rate.sum() == 0 used to NaN the injection distribution and crash."""
+    spec = spec_tiny()
+    z = np.zeros((spec.n_tiles, spec.n_tiles))
+    for fn in (netsim.simulate, netsim.simulate_reference):
+        r = fn(spec, spec.mesh_design(), z, cycles=300, warmup=50)
+        assert r["delivered"] == 0
+        assert r["offered"] == 0.0
+        assert r["throughput"] == 0.0
+        assert np.isinf(r["mean_latency"]) and np.isinf(r["p99_latency"])
+
+
+def test_host_tables_match_jnp_routing_oracle():
+    """The simulator's NumPy next-hop tables must stay bit-identical to the
+    routing.py jnp oracle the analytical objectives use — the docstring's
+    'same tables' claim, pinned."""
+    import jax.numpy as jnp
+
+    from repro.core import routing
+    from repro.core.objectives import design_cost, make_consts
+
+    rng = np.random.default_rng(11)
+    for spec in (spec_tiny(), spec_16()):
+        c = make_consts(spec)
+        for d in (spec.mesh_design(), random_design(spec, rng)):
+            cost = design_cost(c, jnp.asarray(d.adj))
+            dist_j, nh_j = routing.routing_tables(cost, c.apsp_iters)
+            tab = netsim._design_tables(spec, d)
+            np.testing.assert_array_equal(tab["nh"], np.asarray(nh_j))
+            np.testing.assert_array_equal(
+                tab["reach"], np.asarray(dist_j) < netsim.INF / 2)
+
+
+def test_disconnected_design_raises_instead_of_corrupting():
+    """Unroutable traffic must fail loudly (the reference loop KeyErrors);
+    the batched engine must never index ring buffers with edge_id == -1."""
+    spec = spec_tiny()
+    f = traffic_matrix(spec, "BP")
+    d = spec.mesh_design()
+    d.adj[:] = False  # only vertical links remain: disjoint column pairs
+    with pytest.raises(ValueError, match="disconnected"):
+        netsim.simulate(spec, d, f, cycles=100, warmup=20)
+
+
+def test_next_hop_tables_are_cached_per_spec_design():
+    spec = spec_tiny()
+    f = traffic_matrix(spec, "BP")
+    d = spec.mesh_design()
+    netsim.clear_caches()
+    nh1 = netsim._next_hops(spec, d)
+    # Sweeping scales/seeds must reuse the cached tables, not rebuild them.
+    netsim.saturation_throughput(spec, d, f, cycles=200)
+    netsim.simulated_edp(spec, d, f, energy=1.0, cycles=200)
+    assert netsim._next_hops(spec, d) is nh1
+    assert len(netsim._NH_CACHE) == 1
+    # A different design gets its own entry.
+    netsim._next_hops(spec, random_design(spec, np.random.default_rng(0)))
+    assert len(netsim._NH_CACHE) == 2
 
 
 def test_low_load_delivers_offered_traffic():

@@ -1,21 +1,44 @@
-"""Property + unit tests for dominance and Pareto hypervolume (HSO)."""
+"""Property + unit tests for dominance and Pareto hypervolume (HSO).
+
+The property tests need ``hypothesis``; when it is not installed they are
+skipped and the unit tests still run.
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - property tests skip without it
+    st = None
 
 from repro.core.pareto import (PhvContext, dominates, hypervolume,
-                               pareto_filter, pareto_mask)
+                               hypervolume_with_batch, pareto_filter,
+                               pareto_mask)
 
-
-def _point_sets(max_m=4, max_n=8):
-    return st.integers(1, max_m).flatmap(
-        lambda m: st.lists(
-            st.lists(st.floats(0.0, 1.0, allow_nan=False, width=32),
-                     min_size=m, max_size=m),
-            min_size=1, max_size=max_n,
+if st is not None:
+    def _point_sets(max_m=4, max_n=8):
+        return st.integers(1, max_m).flatmap(
+            lambda m: st.lists(
+                st.lists(st.floats(0.0, 1.0, allow_nan=False, width=32),
+                         min_size=m, max_size=m),
+                min_size=1, max_size=max_n,
+            )
         )
-    )
+
+
+def given_point_sets(max_examples):
+    """@given(_point_sets()) when hypothesis is available, skip otherwise."""
+    def deco(fn):
+        if st is None:
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass
+            stub.__name__ = fn.__name__
+            return stub
+        return settings(max_examples=max_examples, deadline=None)(
+            given(_point_sets())(fn))
+    return deco
 
 
 def test_dominates_basic():
@@ -25,8 +48,7 @@ def test_dominates_basic():
     assert not dominates(np.array([1.0, 1.0]), np.array([1.0, 1.0]))
 
 
-@given(_point_sets())
-@settings(max_examples=60, deadline=None)
+@given_point_sets(max_examples=60)
 def test_pareto_mask_properties(pts):
     pts = np.array(pts, dtype=np.float64)
     mask = pareto_mask(pts)
@@ -58,8 +80,16 @@ def test_hypervolume_two_points_2d():
     assert hypervolume(pts, ref) == pytest.approx(0.8 * 0.4 + 0.5 * 0.7 - 0.5 * 0.4)
 
 
-@given(_point_sets())
-@settings(max_examples=40, deadline=None)
+def test_hv2d_staircase_handles_dominated_and_duplicate_points():
+    ref = np.array([1.0, 1.0])
+    pts = np.array([[0.2, 0.6], [0.5, 0.3], [0.5, 0.3], [0.6, 0.9],
+                    [0.2, 0.8]])
+    # Dominated/duplicate rows add nothing to the staircase.
+    assert hypervolume(pts, ref) == pytest.approx(
+        hypervolume(pts[:2], ref))
+
+
+@given_point_sets(max_examples=40)
 def test_hv_dominated_point_is_free(pts):
     pts = np.array(pts, dtype=np.float64)
     ref = np.full(pts.shape[1], 1.5)
@@ -68,8 +98,7 @@ def test_hv_dominated_point_is_free(pts):
     assert hypervolume(np.vstack([pts, worst]), ref) == pytest.approx(base)
 
 
-@given(_point_sets())
-@settings(max_examples=40, deadline=None)
+@given_point_sets(max_examples=40)
 def test_hv_monotone_under_improvement(pts):
     pts = np.array(pts, dtype=np.float64)
     ref = np.full(pts.shape[1], 1.5)
@@ -79,13 +108,34 @@ def test_hv_monotone_under_improvement(pts):
     assert hv2 >= base - 1e-12
 
 
-@given(_point_sets())
-@settings(max_examples=30, deadline=None)
+@given_point_sets(max_examples=30)
 def test_hv_clipping_beyond_ref(pts):
     pts = np.array(pts, dtype=np.float64)
     ref = np.full(pts.shape[1], 0.5)
     hv = hypervolume(pts, ref)
     assert 0.0 <= hv <= 0.5 ** pts.shape[1] + 1e-9
+
+
+@given_point_sets(max_examples=40)
+def test_hv_with_batch_matches_union_hv(pts):
+    """The batched incremental scorer equals HV of the explicit union."""
+    pts = np.array(pts, dtype=np.float64)
+    m = pts.shape[1]
+    ref = np.full(m, 1.5)
+    rng = np.random.default_rng(pts.shape[0] * 7 + m)
+    cands = rng.uniform(0.0, 1.8, size=(6, m))
+    cands[0] = pts[0]            # duplicate of a set member
+    cands[1] = pts[0] + 0.05     # dominated by a set member
+    want = [hypervolume(np.vstack([pts, c[None]]), ref) for c in cands]
+    got = hypervolume_with_batch(pts, cands, ref)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+
+def test_hv_with_batch_empty_set_and_beyond_ref_candidates():
+    ref = np.full(3, 1.0)
+    cands = np.array([[0.5, 0.5, 0.5], [2.0, 2.0, 2.0]])
+    got = hypervolume_with_batch(np.zeros((0, 3)), cands, ref)
+    np.testing.assert_allclose(got, [0.125, 0.0])
 
 
 def test_phv_context_mesh_normalization():
@@ -98,3 +148,22 @@ def test_phv_context_mesh_normalization():
     # phv_with == phv of the union.
     a, b = mesh * 0.9, mesh * 1.05
     assert ctx.phv_with(a[None], b) == pytest.approx(ctx.phv(np.vstack([a, b])))
+
+
+def test_phv_with_batch_matches_scalar_loop():
+    """ctx.phv_with_batch == [ctx.phv_with(S, d) for d] incl. INF rows."""
+    mesh = np.array([2.0, 4.0, 8.0, 16.0, 32.0])
+    for case in [(0, 1), (0, 1, 2), (0, 1, 2, 3), (0, 1, 2, 3, 4)]:
+        ctx = PhvContext(mesh, case)
+        rng = np.random.default_rng(len(case))
+        S = mesh[None] * rng.uniform(0.7, 1.3, size=(8, 1))
+        cands = mesh[None] * rng.uniform(0.6, 1.8, size=(12, 1))
+        cands[3] = 1e9  # invalid (disconnected) design row
+        want = np.array([ctx.phv_with(S, c) for c in cands])
+        got = ctx.phv_with_batch(S, cands)
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+    # Empty working set.
+    ctx = PhvContext(mesh, (0, 1))
+    got = ctx.phv_with_batch(np.zeros((0, 5)), mesh[None] * 0.9)
+    assert got.shape == (1,)
+    assert got[0] == pytest.approx(ctx.phv(mesh[None] * 0.9))

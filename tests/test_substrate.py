@@ -9,6 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip(
+    "repro.dist", reason="repro.dist (sharding substrate) not built yet")
+
 from repro.ckpt import CheckpointManager
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticLM
