@@ -1,6 +1,9 @@
 """Fig. 8 — prediction error of the learned evaluation function Eval across
 MOO-STAGE iterations (paper: <5% after a few hours; we report the error
-trajectory under the container budget)."""
+trajectory under the container budget).
+
+Forest scoring runs through the flat struct-of-arrays ``predict``
+(``forest_backend`` picks numpy/jnp/auto — see core.forest)."""
 
 from __future__ import annotations
 
@@ -11,7 +14,8 @@ from repro.core.stage import moo_stage
 from .common import Timer, problem, row, spec_16, spec_36
 
 
-def main(reduced: bool = False, backend: str = "auto") -> None:
+def main(reduced: bool = False, backend: str = "auto",
+         forest_backend: str = "auto") -> None:
     spec = spec_16() if reduced else spec_36()
     for case in ("case1", "case2", "case3"):
         ev, ctx, mesh = problem(spec, "BFS", case, backend=backend)
@@ -19,7 +23,8 @@ def main(reduced: bool = False, backend: str = "auto") -> None:
             res = moo_stage(spec, ev, ctx, mesh, seed=0,
                             iters_max=5 if reduced else 10,
                             n_swaps=10, n_link_moves=10,
-                            max_local_steps=20 if reduced else 60)
+                            max_local_steps=20 if reduced else 60,
+                            forest_kwargs={"backend": forest_backend})
         errs = [e for _, e in res.eval_errors]
         if errs:
             detail = (f"first_err={errs[0]:.3f};last_err={errs[-1]:.3f};"

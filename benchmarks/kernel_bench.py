@@ -14,11 +14,27 @@ import os
 
 import numpy as np
 
-from repro.core import Evaluator, hypervolume, random_design, spec_36, spec_64, traffic_matrix
+from repro.core import (Evaluator, RegressionForest, hypervolume,
+                        random_design, spec_36, spec_64, traffic_matrix)
 from repro.core import netsim
+from repro.core.features import design_features_batch
 from repro.core.pareto import hypervolume_with_batch
+from repro.core.stage import _meta_greedy
 
 from .common import Timer, row
+
+
+def _min_of(fn, n: int = 5) -> float:
+    """Best-of-N wall time (seconds). Noisy-neighbor load on shared
+    containers makes single-pass timings swing several x; the min is the
+    stable floor (and the first pass is inside the N, so warm numbers can
+    never look slower than cold ones again)."""
+    best = np.inf
+    for _ in range(n):
+        with Timer() as t:
+            fn()
+        best = min(best, t.dt)
+    return best
 
 
 def main(reduced: bool = False) -> None:
@@ -53,16 +69,18 @@ def main(reduced: bool = False) -> None:
         netsim.simulate(spec, d, f, cycles=1000, warmup=200)
     row("netsim_1kcycles", t.dt * 1e6, f"cycles_per_s={1000/t.dt:.0f}")
     bench["vectorized_cold_us"] = t.dt * 1e6
-    with Timer() as t:
-        netsim.simulate(spec, d, f, cycles=1000, warmup=200)
-    row("netsim_1kcycles_warm", t.dt * 1e6,
-        f"cycles_per_s={1000/t.dt:.0f};cached_tables")
-    bench["vectorized_warm_us"] = t.dt * 1e6
-    with Timer() as t:
-        netsim.simulate_reference(spec, d, f, cycles=1000, warmup=200)
-    row("netsim_reference_1kcycles", t.dt * 1e6,
-        f"cycles_per_s={1000/t.dt:.0f};legacy_loop")
-    bench["reference_us"] = t.dt * 1e6
+    # Warm timing: min-of-N with the first (still table-warm) pass discarded
+    # by the min — a single pass under load used to report warm > cold.
+    warm = _min_of(lambda: netsim.simulate(spec, d, f, cycles=1000, warmup=200))
+    row("netsim_1kcycles_warm", warm * 1e6,
+        f"cycles_per_s={1000/warm:.0f};cached_tables;min_of_5")
+    bench["vectorized_warm_us"] = warm * 1e6
+    ref = _min_of(
+        lambda: netsim.simulate_reference(spec, d, f, cycles=1000, warmup=200),
+        n=3)
+    row("netsim_reference_1kcycles", ref * 1e6,
+        f"cycles_per_s={1000/ref:.0f};legacy_loop;min_of_3")
+    bench["reference_us"] = ref * 1e6
     bench["speedup_cold"] = bench["reference_us"] / bench["vectorized_cold_us"]
     bench["speedup_warm"] = bench["reference_us"] / bench["vectorized_warm_us"]
 
@@ -76,6 +94,46 @@ def main(reduced: bool = False) -> None:
     row("netsim_batch16x1k", t.dt / n_sims * 1e6,
         f"sims={n_sims};sims_per_s={n_sims/t.dt:.1f}")
     bench["batch_us_per_sim"] = t.dt / n_sims * 1e6
+
+    # Flat-forest inference: the MOO-STAGE surrogate hot path. Train size
+    # matches a late-run aggregated trajectory set.
+    frng = np.random.default_rng(1)
+    xtr = frng.uniform(-1, 1, size=(4096, 16))
+    ytr = (xtr[:, 0] * 2 + np.sin(3 * xtr[:, 1]) + 0.5 * xtr[:, 2] ** 2
+           + 0.1 * frng.normal(size=4096))
+    forest = RegressionForest(n_trees=24, max_depth=9, seed=0).fit(xtr, ytr)
+    xq = frng.uniform(-1, 1, size=(4096, 16))
+    forest.predict(xq, backend="jnp")  # compile
+    t_ref = _min_of(lambda: forest.predict_reference(xq), n=3)
+    t_np = _min_of(lambda: forest.predict(xq, backend="numpy"))
+    t_jnp = _min_of(lambda: forest.predict(xq, backend="jnp"), n=7)
+    t_best = min(t_np, t_jnp)
+    row("forest_predict_4k", t_best * 1e6,
+        f"speedup_vs_recursive={t_ref/t_best:.1f}x;numpy={t_np*1e6:.0f}us;"
+        f"jnp={t_jnp*1e6:.0f}us;ref={t_ref*1e6:.0f}us")
+    bench["forest_predict_4k_us"] = t_best * 1e6
+    bench["forest_predict_4k_numpy_us"] = t_np * 1e6
+    bench["forest_predict_4k_jnp_us"] = t_jnp * 1e6
+    bench["forest_reference_4k_us"] = t_ref * 1e6
+    bench["forest_speedup_4k"] = t_ref / t_best
+
+    # Meta-search step: batched feature extraction + one flat predict per
+    # sampled neighborhood (no objective evaluations are spent here).
+    srng = np.random.default_rng(2)
+    designs = [random_design(spec, srng) for _ in range(64)]
+    feats = design_features_batch(spec, designs)
+    labels = feats[:, 0] + feats[:, 13]
+    meta_model = RegressionForest(n_trees=24, max_depth=9, seed=0).fit(feats, labels)
+    steps = 10
+
+    def meta():
+        _meta_greedy(spec, meta_model, designs[0], np.random.default_rng(3),
+                     n_swaps=24, n_link_moves=24, max_steps=steps)
+
+    t_meta = _min_of(meta, n=3)
+    row("stage_meta_search", t_meta / steps * 1e6,
+        f"us_per_step;neighborhood=48;steps<={steps}")
+    bench["stage_meta_search_us_per_step"] = t_meta / steps * 1e6
 
     out = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                        "BENCH_netsim.json")

@@ -14,10 +14,14 @@ def main() -> None:
     # Routing backend for the search benchmarks (fig4/fig8/table2):
     # --backend=jnp|pallas|auto. Validated up front so a typo fails fast
     # instead of surfacing as per-module ERROR rows.
+    # --only=<module>[,<module>...] restricts the run (e.g. --only=kernel_bench).
     backend = "auto"
+    only: set[str] | None = None
     for arg in sys.argv[1:]:
         if arg.startswith("--backend="):
             backend = arg.split("=", 1)[1]
+        if arg.startswith("--only="):
+            only = set(arg.split("=", 1)[1].split(","))
     from repro.core import routing
     routing.resolve_backend(backend)  # raises ValueError on typos
     print(f"# repro benchmarks (reduced={reduced}, backend={backend})")
@@ -29,10 +33,17 @@ def main() -> None:
                    roofline_bench, table2_speedup)
 
     takes_backend = (fig4_throughput_model, fig8_eval_error, table2_speedup)
-    for mod in (kernel_bench, fig4_throughput_model, fig6_convergence,
-                table2_speedup, fig8_eval_error, fig9_agnostic,
-                fig10_thermal, roofline_bench):
+    mods = [kernel_bench, fig4_throughput_model, fig6_convergence,
+            table2_speedup, fig8_eval_error, fig9_agnostic,
+            fig10_thermal, roofline_bench]
+    names = {m.__name__.rsplit(".", 1)[-1] for m in mods}
+    if only is not None and (unknown := only - names):
+        raise SystemExit(f"--only names unknown modules: {sorted(unknown)}; "
+                         f"available: {sorted(names)}")
+    for mod in mods:
         name = mod.__name__.rsplit(".", 1)[-1]
+        if only is not None and name not in only:
+            continue
         t = time.perf_counter()
         kwargs = {"backend": backend} if mod in takes_backend else {}
         try:

@@ -38,10 +38,12 @@ class Evaluator:
     interpreter — CPU-only correctness testing of the TPU path."""
 
     def __init__(self, spec: SystemSpec, f: np.ndarray, *,
-                 backend: str = "auto", interpret: bool = False):
+                 backend: str = "auto", interpret: bool = False,
+                 max_batch: int | None = 256):
         self.spec = spec
         self.backend = routing.resolve_backend(backend)
         self.interpret = interpret
+        self.max_batch = max_batch  # chunk bound for the (B, N, N, N) APSP broadcast
         self.consts: SpecConsts = make_consts(spec)
         self.f = jnp.asarray(f, jnp.float32)
         self._cost_fn = jax.jit(jax.vmap(partial(design_cost, self.consts)))
@@ -50,6 +52,7 @@ class Evaluator:
                      in_axes=(0, 0, None, 0, 0))
         )
         self.n_evals = 0  # evaluation counter (search-cost accounting)
+        self.n_calls = 0  # XLA dispatches (batching-efficiency accounting)
 
     # ------------------------------------------------------------- single
     def __call__(self, d: Design) -> np.ndarray:
@@ -63,6 +66,15 @@ class Evaluator:
     def batch_aux(self, designs: list[Design]) -> tuple[np.ndarray, dict]:
         if not designs:
             return np.zeros((0, N_OBJ)), {"net_lat": np.zeros((0,))}
+        if self.max_batch is not None and len(designs) > self.max_batch:
+            # Bound the transient (chunk, N, N, N) min-plus broadcast when a
+            # multi-chain driver concatenates many neighborhoods.
+            outs, auxes = zip(*(
+                self.batch_aux(designs[i:i + self.max_batch])
+                for i in range(0, len(designs), self.max_batch)))
+            return (np.concatenate(outs, axis=0),
+                    {k: np.concatenate([a[k] for a in auxes], axis=0)
+                     for k in auxes[0]})
         b = len(designs)
         pad = 1 << max(0, (b - 1).bit_length())
         perms = np.stack([d.perm for d in designs] + [designs[-1].perm] * (pad - b))
@@ -74,6 +86,7 @@ class Evaluator:
             backend=self.backend, interpret=self.interpret)
         objs, aux = self._eval_fn(perms_j, adjs_j, self.f, dist, nh)
         self.n_evals += b
+        self.n_calls += 1
         aux = {k: np.asarray(v[:b]) for k, v in aux.items()}
         return np.asarray(objs[:b], dtype=np.float64), aux
 

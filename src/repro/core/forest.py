@@ -4,11 +4,50 @@ sklearn is unavailable offline; this is a compact numpy implementation. The
 paper notes any quick, sufficiently expressive regressor works (§5.2).
 Trees use variance-reduction splits, bootstrap bagging, and per-split
 feature subsampling.
+
+Inference is the MOO-STAGE hot path (the surrogate is queried for whole
+sampled neighborhoods every meta-search step), so after fitting, the forest
+is flattened into struct-of-arrays form: per-tree ``feature`` / ``threshold``
+/ ``left`` / ``right`` / ``value`` arrays packed into one padded (T, M)
+tensor. ``predict`` traverses all trees for all samples in one vectorized
+pass — a (T, B) node-pointer array advanced ``depth`` times with flat
+gathers — with a backend switch mirroring core.routing:
+
+  * ``"numpy"`` — the oracle; bit-equal to the recursive traversal
+    (``predict_reference``), pinned by golden tests.
+  * ``"jnp"``   — jit-compiled float32 traversal (``lax.fori_loop`` over
+    depth), batch-padded to a power of two so meta-search can fuse scoring;
+    agrees with numpy up to f32 threshold rounding.
+  * ``"auto"``  — ``"jnp"`` on TPU/GPU, ``"numpy"`` elsewhere.
 """
 
 from __future__ import annotations
 
+from functools import partial
+
 import numpy as np
+
+FOREST_BACKENDS = ("auto", "numpy", "jnp")
+
+
+def resolve_forest_backend(backend: str | None = None,
+                           batch: int | None = None) -> str:
+    """Resolve ``backend`` (default ``"auto"``) to ``"numpy"`` or ``"jnp"``.
+
+    ``auto`` always picks jnp on an accelerator; on CPU it picks numpy for
+    small (neighborhood-sized) batches, where per-call dispatch dominates,
+    and the jitted jnp traversal for large ones."""
+    b = backend if backend is not None else "auto"
+    if b not in FOREST_BACKENDS:
+        raise ValueError(f"backend must be one of {FOREST_BACKENDS}, got {b!r}")
+    if b == "auto":
+        import jax
+
+        if jax.default_backend() in ("tpu", "gpu"):
+            b = "jnp"
+        else:
+            b = "numpy" if batch is not None and batch < 512 else "jnp"
+    return b
 
 
 class _Tree:
@@ -76,15 +115,95 @@ def _predict_tree(node: _Tree, x: np.ndarray) -> np.ndarray:
     return out
 
 
+def _flatten_tree(root: _Tree):
+    """Preorder struct-of-arrays form of one tree.
+
+    Leaves get ``feature = -1`` and self-loop children, so traversal past a
+    leaf is the identity and every sample can be advanced the same (max)
+    number of steps."""
+    feature: list[int] = []
+    threshold: list[float] = []
+    left: list[int] = []
+    right: list[int] = []
+    value: list[float] = []
+    depth = 0
+
+    def rec(node: _Tree, d: int) -> int:
+        nonlocal depth
+        depth = max(depth, d)
+        i = len(feature)
+        feature.append(-1 if node.left is None else node.feature)
+        threshold.append(node.threshold)
+        value.append(node.value)
+        left.append(i)
+        right.append(i)
+        if node.left is not None:
+            left[i] = rec(node.left, d + 1)
+            right[i] = rec(node.right, d + 1)
+        return i
+
+    rec(root, 0)
+    return (np.asarray(feature, np.int32), np.asarray(threshold, np.float64),
+            np.asarray(left, np.int32), np.asarray(right, np.int32),
+            np.asarray(value, np.float64), depth)
+
+
+def _predict_flat_jnp_fn():
+    """Build the jitted flat traversal lazily so importing the forest never
+    forces a jax initialization.
+
+    Works on the (T*B,)-flattened node-pointer layout: every (tree, sample)
+    pair advances one int32 pointer per level via three 1-D gathers. Leaves
+    self-loop, so no leaf masking is needed and the loop fully unrolls
+    (``depth`` is static). All arrays are int32/f32 — predictions agree with
+    the f64 numpy oracle up to f32 threshold rounding."""
+    import jax
+    import jax.numpy as jnp
+
+    def g(a, idx):
+        # All pointers are in bounds by construction (children stay inside
+        # their tree, leaf features are clamped to 0) — skipping the default
+        # index clamping roughly halves the gather cost on CPU.
+        return a.at[idx].get(mode="promise_in_bounds")
+
+    @partial(jax.jit, static_argnames=("depth", "n_trees", "n_nodes"))
+    def run(thrfeat, child, value, xn, depth, n_trees, n_nodes):
+        # thrfeat packs (threshold, feature) as one complex64 per node, so a
+        # level costs 3 gathers instead of 4 (features are tiny ints — exact
+        # as f32 imag parts).
+        b, f = xn.shape
+        xnf = xn.reshape(-1)
+        idx = jnp.repeat(jnp.arange(n_trees, dtype=jnp.int32) * n_nodes, b)
+        cols = jnp.tile(jnp.arange(b, dtype=jnp.int32) * f, n_trees)
+        for _ in range(depth):
+            tf = g(thrfeat, idx)
+            fi = jnp.imag(tf).astype(jnp.int32)
+            xv = g(xnf, fi + cols)
+            go_right = (xv > jnp.real(tf)).astype(jnp.int32)
+            idx = g(child, (idx * 2) + go_right)
+        return g(value, idx).reshape(n_trees, b).mean(axis=0)
+
+    return run
+
+
+_JITTED_FLAT = None
+
+
 class RegressionForest:
     def __init__(self, n_trees: int = 24, max_depth: int = 9,
-                 min_leaf: int = 3, seed: int = 0):
+                 min_leaf: int = 3, seed: int = 0, backend: str = "auto"):
         self.n_trees = n_trees
         self.max_depth = max_depth
         self.min_leaf = min_leaf
+        self.backend = backend
+        if backend not in FOREST_BACKENDS:  # fail fast, but don't touch jax
+            raise ValueError(
+                f"backend must be one of {FOREST_BACKENDS}, got {backend!r}")
         self.rng = np.random.default_rng(seed)
         self.trees: list[_Tree] = []
         self._xm = self._xs = None
+        self._flat = None       # packed (T, M) numpy tensors
+        self._flat_jnp = None   # f32 device copies, built on first jnp call
 
     def fit(self, x: np.ndarray, y: np.ndarray) -> "RegressionForest":
         x = np.asarray(x, np.float64)
@@ -101,9 +220,124 @@ class RegressionForest:
                 _build(xn[idx], y[idx], self.rng, 0, self.max_depth,
                        self.min_leaf, n_feat_try)
             )
+        self._pack()
         return self
 
-    def predict(self, x: np.ndarray) -> np.ndarray:
+    # ------------------------------------------------------------ flattening
+    def _pack(self):
+        flats = [_flatten_tree(t) for t in self.trees]
+        t = len(flats)
+        m = max(f[0].shape[0] for f in flats)
+        feature = np.full((t, m), -1, np.int32)
+        threshold = np.zeros((t, m), np.float64)
+        left = np.tile(np.arange(m, dtype=np.int32), (t, 1))
+        right = left.copy()
+        value = np.zeros((t, m), np.float64)
+        depth = 0
+        for i, (fe, th, le, ri, va, de) in enumerate(flats):
+            k = fe.shape[0]
+            feature[i, :k] = fe
+            threshold[i, :k] = th
+            left[i, :k] = le
+            right[i, :k] = ri
+            value[i, :k] = va
+            depth = max(depth, de)
+        # Flat-absolute children (child[2i] = left, child[2i+1] = right) let
+        # the traversal do one gather per step; leaves self-loop, so samples
+        # that arrive early just spin in place — no leaf masking needed, and
+        # leaf features are clamped to 0 so the x-gather stays in bounds.
+        offs = (np.arange(t, dtype=np.int64) * m)[:, None]
+        child = np.empty((t, m, 2), np.int64)
+        child[:, :, 0] = left + offs
+        child[:, :, 1] = right + offs
+        self._flat = {
+            "feature": feature, "threshold": threshold,
+            "left": left, "right": right, "value": value,
+            "child_flat": child.reshape(-1),
+            "feat_safe_flat": np.maximum(feature, 0).astype(np.int64).reshape(-1),
+            "threshold_flat": threshold.reshape(-1),
+            "value_flat": value.reshape(-1),
+            "depth": depth, "n_nodes": m,
+        }
+        self._flat_jnp = None
+
+    # -------------------------------------------------------------- predict
+    def _normalize(self, x: np.ndarray) -> np.ndarray:
         x = np.atleast_2d(np.asarray(x, np.float64))
-        xn = (x - self._xm) / self._xs
+        return (x - self._xm) / self._xs
+
+    def predict(self, x: np.ndarray, backend: str | None = None) -> np.ndarray:
+        """(B,) forest mean via the flat vectorized traversal."""
+        xn = self._normalize(x)
+        b = resolve_forest_backend(backend if backend is not None else self.backend,
+                                   batch=xn.shape[0])
+        if b == "jnp":
+            return self._predict_jnp(xn)
+        return self._predict_numpy(xn)
+
+    def predict_reference(self, x: np.ndarray) -> np.ndarray:
+        """Recursive per-tree traversal — the original implementation, kept
+        as the golden oracle for the flat paths."""
+        xn = self._normalize(x)
         return np.mean([_predict_tree(t, xn) for t in self.trees], axis=0)
+
+    def _predict_numpy(self, xn: np.ndarray) -> np.ndarray:
+        """Flat vectorized traversal: node pointers advanced ``depth`` times
+        with 1-D ``np.take`` gathers. Bit-equal to the recursive reference
+        (same f64 compares, same ``np.mean`` over the tree axis).
+
+        Small batches (the meta-search neighborhood path) use one (T, B)
+        pointer block — 4 gathers per level total; big batches iterate per
+        tree so the gather working set stays cache-resident."""
+        fl = self._flat
+        t, m, depth = len(self.trees), fl["n_nodes"], fl["depth"]
+        b = xn.shape[0]
+        feat = fl["feat_safe_flat"]
+        thr = fl["threshold_flat"]
+        child = fl["child_flat"]
+        xnf = np.ascontiguousarray(xn).ravel()
+        cols = np.arange(b, dtype=np.int64) * xn.shape[1]
+        if b <= 1024:
+            idx = (np.arange(t, dtype=np.int64) * m)[:, None] + np.zeros(
+                (1, b), np.int64)
+            for _ in range(depth):
+                fi = np.take(feat, idx)
+                xv = np.take(xnf, fi + cols[None, :])
+                go_right = np.take(thr, idx) < xv
+                idx = np.take(child, (idx << 1) + go_right)
+            return np.take(fl["value_flat"], idx).mean(axis=0)
+        vals = np.empty((t, b))
+        for ti in range(t):
+            idx = np.full(b, ti * m, np.int64)
+            for _ in range(depth):
+                fi = np.take(feat, idx)
+                xv = np.take(xnf, fi + cols)
+                go_right = np.take(thr, idx) < xv
+                idx = np.take(child, (idx << 1) + go_right)
+            vals[ti] = np.take(fl["value_flat"], idx)
+        return np.mean(vals, axis=0)
+
+    def _predict_jnp(self, xn: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+
+        global _JITTED_FLAT
+        if _JITTED_FLAT is None:
+            _JITTED_FLAT = _predict_flat_jnp_fn()
+        if self._flat_jnp is None:
+            fl = self._flat
+            thrfeat = (fl["threshold_flat"].astype(np.float32) +
+                       1j * fl["feat_safe_flat"].astype(np.float32))
+            self._flat_jnp = (
+                jnp.asarray(thrfeat.astype(np.complex64)),
+                jnp.asarray(fl["child_flat"], jnp.int32),
+                jnp.asarray(fl["value_flat"], jnp.float32),
+            )
+        b = xn.shape[0]
+        pad = 1 << max(0, (b - 1).bit_length())  # bound recompiles
+        xp = np.zeros((pad, xn.shape[1]), np.float32)
+        xp[:b] = xn
+        fl = self._flat
+        out = _JITTED_FLAT(*self._flat_jnp, jnp.asarray(xp),
+                           depth=fl["depth"], n_trees=len(self.trees),
+                           n_nodes=fl["n_nodes"])
+        return np.asarray(out[:b], np.float64)

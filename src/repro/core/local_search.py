@@ -4,7 +4,13 @@ From a starting design, repeatedly evaluate a (sampled) neighborhood in one
 batched JAX call, move to the neighbor maximizing PHV(S_local ∪ {d}), and
 stop when the best neighbor no longer improves the PHV. Returns the local
 non-dominated set, the search trajectory, and the last design (Alg. 1's
-(S_local, S_traj, d_last))."""
+(S_local, S_traj, d_last)).
+
+:func:`local_search_batch` runs K chains in lockstep: per step, every live
+chain samples its neighborhood and ALL candidates go through one
+``Evaluator.batch`` call (one padded XLA dispatch serves every chain), then
+each chain takes its own greedy PHV step. ``local_search`` is the K=1
+special case."""
 
 from __future__ import annotations
 
@@ -67,49 +73,127 @@ def local_search(
     max_set: int = 24,
     history: "SearchHistory | None" = None,
 ) -> LocalResult:
-    start_objs = ev(d_start)
-    s_local = ParetoSet.empty().merged_with([d_start], start_objs[None], ctx.obj_idx)
-    traj = [d_start]
-    traj_objs = [start_objs]
-    d_curr = d_start
-    phv_curr = ctx.phv(s_local.objs)
+    return local_search_batch(
+        spec, ev, ctx, [d_start], rng,
+        n_swaps=n_swaps, n_link_moves=n_link_moves, max_steps=max_steps,
+        max_set=max_set, history=history,
+    )[0]
 
-    steps = 0
-    for steps in range(1, max_steps + 1):
-        cands = sample_neighbors(spec, d_curr, rng, n_swaps, n_link_moves)
-        if not cands:
-            break
-        objs = ev.batch(cands)
-        # argmax_d PHV(S_local ∪ {d}) — Alg. 1 line 3, scored for the whole
-        # neighborhood in one batched exclusive-contribution pass.
-        phvs = ctx.phv_with_batch(s_local.objs, objs)
-        j = int(np.argmax(phvs))
-        if phvs[j] <= phv_curr + 1e-12:
-            break
-        d_curr = cands[j]
-        s_local = s_local.merged_with([d_curr], objs[j][None], ctx.obj_idx)
-        if len(s_local.designs) > max_set:
-            # Bound the PHV working set (crowding thinning, as AMOSA bounds
-            # its archive) — HSO cost grows fast with set size.
-            from .amosa import _crowding_thin
-            keep = _crowding_thin(
-                ctx.normalize(s_local.objs), max_set * 2 // 3)
-            s_local = ParetoSet(
-                [s_local.designs[i] for i in keep], s_local.objs[keep])
-        phv_curr = phvs[j]
-        traj.append(d_curr)
-        traj_objs.append(objs[j])
-        if history is not None:
-            history.record(ev, d_curr, objs[j])
 
-    return LocalResult(
-        local=s_local,
-        traj=traj,
-        traj_objs=np.stack(traj_objs),
-        d_last=d_curr,
-        phv=phv_curr,
-        n_steps=steps,
-    )
+class _Chain:
+    """Mutable per-chain state for the lockstep driver."""
+
+    __slots__ = ("s_local", "traj", "traj_objs", "d_curr", "phv", "active",
+                 "n_steps")
+
+    def __init__(self, d0: Design, objs0: np.ndarray, ctx: PhvContext,
+                 seed_set: "ParetoSet | None" = None):
+        base = seed_set if seed_set is not None else ParetoSet.empty()
+        self.s_local = base.merged_with([d0], objs0[None], ctx.obj_idx)
+        self.traj = [d0]
+        self.traj_objs = [objs0]
+        self.d_curr = d0
+        self.phv = ctx.phv(self.s_local.objs)
+        self.active = True
+        self.n_steps = 0
+
+
+def local_search_batch(
+    spec: SystemSpec,
+    ev: Evaluator,
+    ctx: PhvContext,
+    starts: list[Design],
+    rng: np.random.Generator,
+    *,
+    n_swaps: int = 24,
+    n_link_moves: int = 24,
+    max_steps: int = 10_000,
+    max_set: int = 24,
+    history: "SearchHistory | None" = None,
+    max_evals: int | None = None,
+    seed_set: "ParetoSet | None" = None,
+) -> list[LocalResult]:
+    """K PHV-greedy local searches advanced in lockstep (one padded
+    ``Evaluator.batch`` call per step serves every live chain). With a
+    single start this IS ``local_search`` — the rng stream, greedy argmax,
+    and thinning are identical. ``max_evals`` stops launching new steps once
+    the evaluator's counter crosses the budget (multi-start accounting).
+
+    ``seed_set`` (e.g. the global non-dominated set of a multi-start driver)
+    pre-populates every chain's working set, so each chain greedily maximizes
+    its *marginal* PHV over what is already known — chains coordinate toward
+    complementary regions instead of re-finding the same tradeoffs."""
+    from .amosa import _crowding_thin
+
+    start_objs = ev.batch(starts)
+    chains = [_Chain(d0, o, ctx, seed_set) for d0, o in zip(starts, start_objs)]
+
+    for step in range(1, max_steps + 1):
+        if max_evals is not None and ev.n_evals >= max_evals:
+            break
+        cand_lists: list[list[Design]] = []
+        for ch in chains:
+            if not ch.active:
+                cand_lists.append([])
+                continue
+            ch.n_steps = step
+            cands = sample_neighbors(spec, ch.d_curr, rng, n_swaps, n_link_moves)
+            if not cands:
+                ch.active = False
+            cand_lists.append(cands)
+        flat = [c for cl in cand_lists for c in cl]
+        if not flat:
+            break
+        objs_all = ev.batch(flat)
+        ofs = 0
+        for ch, cands in zip(chains, cand_lists):
+            if not cands:
+                continue
+            objs = objs_all[ofs:ofs + len(cands)]
+            ofs += len(cands)
+            if not ch.active:
+                continue
+            # argmax_d PHV(S_local ∪ {d}) — Alg. 1 line 3, scored for the
+            # whole neighborhood in one batched exclusive-contribution pass.
+            phvs = ctx.phv_with_batch(ch.s_local.objs, objs)
+            j = int(np.argmax(phvs))
+            if phvs[j] <= ch.phv + 1e-12:
+                ch.active = False
+                continue
+            ch.d_curr = cands[j]
+            ch.s_local = ch.s_local.merged_with([ch.d_curr], objs[j][None],
+                                                ctx.obj_idx)
+            ch.phv = phvs[j]
+            if len(ch.s_local.designs) > max_set:
+                # Bound the PHV working set (crowding thinning, as AMOSA
+                # bounds its archive) — HSO cost grows fast with set size.
+                keep = _crowding_thin(
+                    ctx.normalize(ch.s_local.objs), max_set * 2 // 3)
+                ch.s_local = ParetoSet(
+                    [ch.s_local.designs[i] for i in keep],
+                    ch.s_local.objs[keep])
+                # Re-anchor the greedy bar to the thinned set: candidates are
+                # scored against it, so keeping the pre-thinning PHV would
+                # set an unattainable bar and stall the chain.
+                ch.phv = ctx.phv(ch.s_local.objs)
+            ch.traj.append(ch.d_curr)
+            ch.traj_objs.append(objs[j])
+            if history is not None:
+                history.record(ev, ch.d_curr, objs[j])
+        if not any(ch.active for ch in chains):
+            break
+
+    return [
+        LocalResult(
+            local=ch.s_local,
+            traj=ch.traj,
+            traj_objs=np.stack(ch.traj_objs),
+            d_last=ch.d_curr,
+            phv=ch.phv,
+            n_steps=ch.n_steps,
+        )
+        for ch in chains
+    ]
 
 
 class SearchHistory:

@@ -5,7 +5,16 @@ Variation operators respect the design space: crossover recombines the two
 parents' tile placements (cycle-style repair to stay a permutation) and
 takes a random mix of their planar links (repaired to the exact link
 budget); mutation applies the paper's neighbor moves. Evaluation is batched
-through the jitted Evaluator — a full population is scored per XLA call."""
+through the jitted Evaluator — a full population is scored per XLA call.
+
+Selection scoring (nondominated rank + crowding) is itself array-shaped:
+the numpy implementation is the oracle and a jit-compiled jnp twin
+(``backend="jnp"``) fuses the O(n²·m) dominance tensor, the front-peeling
+loop, and the per-objective crowding sweeps into one XLA call per
+population. Duplicate objective rows are tie-broken deterministically by
+index (first copy ranks first), which keeps the dominance relation acyclic
+— a front always exists and genuinely dominated points can never share a
+rank with a dominator."""
 
 from __future__ import annotations
 
@@ -16,23 +25,45 @@ from .local_search import ParetoSet, SearchHistory
 from .pareto import PhvContext
 from .problem import Design, SystemSpec, sample_neighbors
 
+RANK_BACKENDS = ("auto", "numpy", "jnp")
 
-def _fast_nondominated_rank(objs: np.ndarray) -> np.ndarray:
+
+def resolve_rank_backend(backend: str | None = None) -> str:
+    b = backend if backend is not None else "auto"
+    if b not in RANK_BACKENDS:
+        raise ValueError(f"backend must be one of {RANK_BACKENDS}, got {b!r}")
+    if b == "auto":
+        import jax
+
+        b = "jnp" if jax.default_backend() in ("tpu", "gpu") else "numpy"
+    return b
+
+
+def _dominance(objs: np.ndarray):
+    """dom[i, j]: i dominates j, with exact-duplicate rows ordered by index
+    (the first copy dominates later copies). The relation stays acyclic:
+    along any would-be cycle the rows must be equal, and equal rows are
+    ordered by strictly increasing index."""
     n = objs.shape[0]
     le = np.all(objs[:, None, :] <= objs[None, :, :], axis=-1)
     lt = np.any(objs[:, None, :] < objs[None, :, :], axis=-1)
-    dom = le & lt
+    idx = np.arange(n)
+    dup = le & ~lt & (idx[:, None] < idx[None, :])
+    return (le & lt) | dup
+
+
+def _fast_nondominated_rank(objs: np.ndarray) -> np.ndarray:
+    dom = _dominance(objs)
+    n = objs.shape[0]
     n_dom = dom.sum(axis=0)  # how many dominate j
     rank = np.full(n, -1)
     r = 0
     remaining = np.ones(n, dtype=bool)
     while remaining.any():
         front = remaining & (n_dom == 0)
-        if not front.any():  # numerical ties
-            front = remaining
+        assert front.any(), "dominance relation must be acyclic"
         rank[front] = r
-        for i in np.flatnonzero(front):
-            n_dom -= dom[i]
+        n_dom = n_dom - dom[front].sum(axis=0)
         remaining &= ~front
         r += 1
     return rank
@@ -48,6 +79,61 @@ def _crowding(objs: np.ndarray) -> np.ndarray:
         if n > 2:
             crowd[order[1:-1]] += (objs[order[2:], j] - objs[order[:-2], j]) / rng_j
     return crowd
+
+
+def _rank_crowd_jnp_fn():
+    """Jitted (rank, crowding) twin of the numpy pair. Peeling runs as a
+    fori_loop (at most n fronts); the whole selection scoring is one fused
+    XLA program per population shape."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def run(objs):
+        n, m = objs.shape
+        le = jnp.all(objs[:, None, :] <= objs[None, :, :], axis=-1)
+        lt = jnp.any(objs[:, None, :] < objs[None, :, :], axis=-1)
+        idx = jnp.arange(n)
+        dom = (le & lt) | (le & ~lt & (idx[:, None] < idx[None, :]))
+
+        def body(r, state):
+            rank, n_dom = state
+            front = (rank < 0) & (n_dom == 0)
+            rank = jnp.where(front, r, rank)
+            n_dom = n_dom - (dom & front[:, None]).sum(axis=0)
+            return rank, n_dom
+
+        rank, _ = jax.lax.fori_loop(
+            0, n, body, (jnp.full(n, -1, jnp.int32), dom.sum(axis=0)))
+
+        crowd = jnp.zeros(n)
+        for j in range(m):
+            order = jnp.argsort(objs[:, j])  # stable by default in jax
+            col = objs[order, j]
+            rng_j = col[-1] - col[0] + 1e-12
+            contrib = jnp.zeros(n)
+            if n > 2:
+                contrib = contrib.at[order[1:-1]].set(
+                    (col[2:] - col[:-2]) / rng_j)
+            crowd = crowd + contrib
+            crowd = crowd.at[order[0]].set(jnp.inf).at[order[-1]].set(jnp.inf)
+        return rank, crowd
+
+    return run
+
+
+_RANK_CROWD_JNP = None
+
+
+def rank_and_crowding(objs: np.ndarray, backend: str | None = None):
+    """(rank, crowding) for one population on the selected backend."""
+    if resolve_rank_backend(backend) == "jnp":
+        global _RANK_CROWD_JNP
+        if _RANK_CROWD_JNP is None:
+            _RANK_CROWD_JNP = _rank_crowd_jnp_fn()
+        rank, crowd = _RANK_CROWD_JNP(np.asarray(objs, np.float32))
+        return np.asarray(rank), np.asarray(crowd, np.float64)
+    return _fast_nondominated_rank(objs), _crowding(objs)
 
 
 def _crossover(spec: SystemSpec, a: Design, b: Design,
@@ -87,9 +173,11 @@ def nsga2(
     p_mutate: float = 0.6,
     max_evals: int | None = None,
     history: SearchHistory | None = None,
+    rank_backend: str = "auto",
 ) -> ParetoSet:
     rng = np.random.default_rng(seed)
     history = history or SearchHistory(ev, ctx)
+    rank_backend = resolve_rank_backend(rank_backend)
 
     pop = [d0]
     while len(pop) < pop_size:
@@ -103,8 +191,7 @@ def nsga2(
         if max_evals is not None and ev.n_evals >= max_evals:
             break
         sub = objs[:, list(ctx.obj_idx)]
-        rank = _fast_nondominated_rank(sub)
-        crowd = _crowding(sub)
+        rank, crowd = rank_and_crowding(sub, rank_backend)
 
         def tournament():
             i, j = rng.integers(len(pop), size=2)
@@ -128,8 +215,7 @@ def nsga2(
         union = pop + children
         uobjs = np.vstack([objs, child_objs])
         sub = uobjs[:, list(ctx.obj_idx)]
-        rank = _fast_nondominated_rank(sub)
-        crowd = _crowding(sub)
+        rank, crowd = rank_and_crowding(sub, rank_backend)
         order = np.lexsort((-crowd, rank))
         keep = order[:pop_size]
         pop = [union[i] for i in keep]

@@ -5,7 +5,13 @@ non-dominated set → learn Eval : features(d) ↦ PHV(local_search(d)) from all
 past trajectories (aggregated training set, DAgger-style) → Meta search
 (greedy ascent on Eval from d_last) to choose the next restart; random
 restart when the meta search cannot move (Alg. 2 lines 9-13).
-"""
+
+The whole loop is array-shaped: feature extraction is batched
+(:func:`repro.core.features.design_features_batch`), the surrogate scores a
+whole sampled neighborhood per meta step in ONE flat-forest ``predict``
+call, and :func:`stage_batch` runs K restart chains in lockstep so every
+candidate evaluation in the expensive phase goes through the evaluator's
+batched APSP/objective path in shared, padded XLA dispatches."""
 
 from __future__ import annotations
 
@@ -14,9 +20,10 @@ import dataclasses
 import numpy as np
 
 from .evaluate import Evaluator
-from .features import design_features
+from .features import design_features_batch
 from .forest import RegressionForest
-from .local_search import (LocalResult, ParetoSet, SearchHistory, local_search)
+from .local_search import (LocalResult, ParetoSet, SearchHistory,
+                           local_search, local_search_batch)
 from .pareto import PhvContext
 from .problem import Design, SystemSpec, random_design, sample_neighbors
 
@@ -27,6 +34,20 @@ class StageResult:
     history: SearchHistory
     eval_errors: list[tuple[int, float]]   # (iteration, |Eval(d_start) - actual PHV|/PHV)
     n_local_searches: int
+    converged: bool
+
+
+@dataclasses.dataclass
+class StageBatchResult:
+    """Multi-start MOO-STAGE outcome: one global Pareto set merged across
+    all K chains plus the usual diagnostics."""
+
+    global_set: ParetoSet
+    history: SearchHistory
+    eval_errors: list[tuple[int, float]]
+    n_local_searches: int
+    n_starts: int
+    n_evals: int
     converged: bool
 
 
@@ -41,15 +62,16 @@ def _meta_greedy(
     max_steps: int = 30,
 ) -> Design:
     """Greedy ascent on the learned Eval (Alg. 2 line 9). Uses only cheap
-    structural features — no objective evaluations are spent here."""
+    structural features — no objective evaluations are spent here. Each step
+    featurizes and scores the whole sampled neighborhood in one batched
+    extract + one flat-forest ``predict``."""
     d_curr = d_from
-    v_curr = float(model.predict(design_features(spec, d_curr)[None])[0])
+    v_curr = float(model.predict(design_features_batch(spec, [d_curr]))[0])
     for _ in range(max_steps):
         cands = sample_neighbors(spec, d_curr, rng, n_swaps, n_link_moves)
         if not cands:
             break
-        feats = np.stack([design_features(spec, c) for c in cands])
-        vals = model.predict(feats)
+        vals = model.predict(design_features_batch(spec, cands))
         j = int(np.argmax(vals))
         if vals[j] <= v_curr + 1e-12:
             break
@@ -83,7 +105,7 @@ def moo_stage(
 
     for it in range(iters_max):
         predicted = (
-            float(model.predict(design_features(spec, d_start)[None])[0])
+            float(model.predict(design_features_batch(spec, [d_start]))[0])
             if model is not None
             else None
         )
@@ -109,9 +131,8 @@ def moo_stage(
 
         # Aggregate training examples: every trajectory design is labeled
         # with the PHV its local search achieved (line 7).
-        for d in res.traj:
-            x_train.append(design_features(spec, d))
-            y_train.append(res.phv)
+        x_train.extend(design_features_batch(spec, res.traj))
+        y_train.extend([res.phv] * len(res.traj))
 
         fk = forest_kwargs or {}
         model = RegressionForest(seed=seed + it, **fk).fit(
@@ -132,5 +153,130 @@ def moo_stage(
         history=history,
         eval_errors=eval_errors,
         n_local_searches=it + 1,
+        converged=converged,
+    )
+
+
+def stage_batch(
+    spec: SystemSpec,
+    f: np.ndarray,
+    n_starts: int = 4,
+    seed: int = 0,
+    *,
+    case: str = "case3",
+    backend: str = "auto",
+    iters_max: int = 12,
+    n_swaps: int = 24,
+    n_link_moves: int = 24,
+    max_local_steps: int = 10_000,
+    forest_kwargs: dict | None = None,
+    max_evals: int | None = None,
+    ev: Evaluator | None = None,
+    ctx: PhvContext | None = None,
+    history: SearchHistory | None = None,
+    d0: Design | None = None,
+) -> StageBatchResult:
+    """Multi-start MOO-STAGE: K restart chains advanced in lockstep.
+
+    All chains share one evaluator (their per-step neighborhoods are
+    concatenated into single batched APSP + objective dispatches via
+    :func:`local_search_batch`), one global non-dominated set, and one
+    aggregated Eval training set — every chain's trajectories teach the one
+    surrogate, which then steers every chain's next restart (cross-chain
+    DAgger). Chain 0 starts from ``d0`` (default: the 3D mesh, §6.3); chain
+    i starts from the mesh perturbed by 2·i random neighbor moves — diverse
+    basins without wasting budget on uniformly random (far-from-mesh)
+    starting designs.
+
+    ``max_evals`` bounds the total objective-evaluation budget across all
+    chains (checked per lockstep step), making equal-budget comparisons
+    against the single-start driver direct.
+    """
+    from .objectives import CASES
+
+    if n_starts < 1:
+        raise ValueError(f"n_starts must be >= 1, got {n_starts}")
+    rng = np.random.default_rng(seed)
+    if ev is None:
+        ev = Evaluator(spec, f, backend=backend)
+    if ctx is None:
+        ctx = PhvContext(ev(spec.mesh_design()), CASES[case])
+    history = history or SearchHistory(ev, ctx)
+
+    base = d0 or spec.mesh_design()
+    starts = [base]
+    for i in range(1, n_starts):
+        d = base
+        for _ in range(2 * i):  # chain i: 2·i random moves away from base
+            nb = sample_neighbors(spec, d, rng, 1, 1)
+            if nb:
+                d = nb[int(rng.integers(len(nb)))]
+        starts.append(d)
+
+    s_global = ParetoSet.empty()
+    x_train: list[np.ndarray] = []
+    y_train: list[float] = []
+    eval_errors: list[tuple[int, float]] = []
+    model: RegressionForest | None = None
+    converged = False
+    n_local = 0
+
+    for it in range(iters_max):
+        if max_evals is not None and ev.n_evals >= max_evals:
+            break
+        predicted = (
+            model.predict(design_features_batch(spec, starts))
+            if model is not None
+            else None
+        )
+        results = local_search_batch(
+            spec, ev, ctx, starts, rng,
+            n_swaps=n_swaps, n_link_moves=n_link_moves,
+            max_steps=max_local_steps, history=history, max_evals=max_evals,
+            seed_set=s_global if s_global.designs else None,
+        )
+        n_local += len(results)
+
+        any_new = False
+        for ci, res in enumerate(results):
+            if predicted is not None and res.phv > 0:
+                eval_errors.append((it, abs(float(predicted[ci]) - res.phv) / res.phv))
+            merged = s_global.merged_with(
+                res.local.designs, res.local.objs, ctx.obj_idx)
+            if merged.keys() - s_global.keys():  # new keys can only be local
+                any_new = True
+            s_global = merged
+            x_train.extend(design_features_batch(spec, res.traj))
+            y_train.extend([res.phv] * len(res.traj))
+
+        if not any_new:
+            converged = True
+            break
+        if max_evals is not None and ev.n_evals >= max_evals:
+            break
+
+        fk = forest_kwargs or {}
+        model = RegressionForest(seed=seed + it, **fk).fit(
+            np.stack(x_train), np.asarray(y_train)
+        )
+
+        starts = []
+        for res in results:
+            d_restart = _meta_greedy(
+                spec, model, res.d_last, rng,
+                n_swaps=n_swaps, n_link_moves=n_link_moves,
+            )
+            if d_restart.key() == res.d_last.key():
+                starts.append(random_design(spec, rng))   # lines 10-11
+            else:
+                starts.append(d_restart)                   # line 13
+
+    return StageBatchResult(
+        global_set=s_global,
+        history=history,
+        eval_errors=eval_errors,
+        n_local_searches=n_local,
+        n_starts=n_starts,
+        n_evals=ev.n_evals,
         converged=converged,
     )

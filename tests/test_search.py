@@ -8,10 +8,11 @@ from repro.core import (CASES, Design, Evaluator, PhvContext, dominates,
                         random_design, spec_16, spec_tiny, traffic_matrix)
 from repro.core.amosa import amosa
 from repro.core.forest import RegressionForest
-from repro.core.local_search import SearchHistory, local_search
-from repro.core.nsga2 import nsga2
+from repro.core.local_search import (SearchHistory, local_search,
+                                     local_search_batch)
+from repro.core.nsga2 import _fast_nondominated_rank, nsga2, rank_and_crowding
 from repro.core.pcbb import pcbb
-from repro.core.stage import moo_stage
+from repro.core.stage import moo_stage, stage_batch
 
 
 @pytest.fixture(scope="module")
@@ -108,6 +109,110 @@ def test_regression_forest_fits_smooth_function():
     yt = xt[:, 0] * 2 + np.sin(3 * xt[:, 1]) + 0.5 * xt[:, 2] ** 2
     sse_t = float(np.mean((model.predict(xt) - yt) ** 2))
     assert sse_t < 0.5 * float(np.var(yt))
+
+
+def test_local_search_batch_lockstep(small_problem):
+    spec, f, ev, ctx = small_problem
+    rng = np.random.default_rng(0)
+    mesh = spec.mesh_design()
+    starts = [mesh, random_design(spec, rng), random_design(spec, rng)]
+    calls_before, evals_before = ev.n_calls, ev.n_evals
+    results = local_search_batch(spec, ev, ctx, starts, rng,
+                                 n_swaps=6, n_link_moves=6, max_steps=8)
+    assert len(results) == 3
+    for res, d0 in zip(results, starts):
+        assert res.traj[0].key() == d0.key()
+        assert res.phv >= 0
+        sub = res.local.objs[:, list(ctx.obj_idx)]
+        for i in range(sub.shape[0]):
+            for j in range(sub.shape[0]):
+                if i != j:
+                    assert not dominates(sub[i], sub[j])
+    # Lockstep batching: far fewer XLA dispatches than evaluations.
+    assert ev.n_calls - calls_before <= 1 + 8
+    assert ev.n_evals - evals_before > 3 * 8
+
+
+def test_local_search_batch_respects_budget(small_problem):
+    spec, f, ev, ctx = small_problem
+    rng = np.random.default_rng(1)
+    budget = ev.n_evals + 40
+    results = local_search_batch(
+        spec, ev, ctx, [spec.mesh_design()] * 2, rng,
+        n_swaps=6, n_link_moves=6, max_steps=50, max_evals=budget)
+    # May overshoot by at most one lockstep round (2 chains x 12 cands).
+    assert ev.n_evals <= budget + 2 * 12
+    assert len(results) == 2
+
+
+def test_stage_batch_multistart_phv_beats_single_start(small_problem):
+    """Acceptance: at equal evaluation budget, the 4-chain driver's global
+    Pareto set has PHV >= the single-start run's."""
+    spec, f, ev, ctx = small_problem
+    budget = 2000
+    kw = dict(seed=0, iters_max=30, n_swaps=8, n_link_moves=8,
+              max_local_steps=1000, max_evals=budget)
+    r1 = stage_batch(spec, f, n_starts=1, **kw)
+    r4 = stage_batch(spec, f, n_starts=4, **kw)
+    assert r1.n_evals <= budget + 64 and r4.n_evals <= budget + 64
+    p1 = ctx.phv(r1.global_set.objs)
+    p4 = ctx.phv(r4.global_set.objs)
+    assert p4 >= p1
+    assert r4.n_starts == 4
+    # Global set stays mutually non-dominated and structurally valid.
+    sub = r4.global_set.objs[:, list(ctx.obj_idx)]
+    for i in range(sub.shape[0]):
+        for j in range(sub.shape[0]):
+            if i != j:
+                assert not dominates(sub[i], sub[j])
+    for d in r4.global_set.designs:
+        assert sorted(d.perm.tolist()) == list(range(spec.n_tiles))
+        assert int(np.triu(d.adj).sum()) == spec.n_planar_links
+
+
+def test_nondominated_rank_duplicate_rows_deterministic():
+    """Regression: duplicate objective rows are tie-broken by index, and a
+    dominated point never shares a rank with one of its dominators."""
+    objs = np.array([
+        [0.0, 0.0],
+        [0.0, 0.0],   # exact duplicate of row 0
+        [1.0, 1.0],   # dominated by both duplicates
+        [0.0, 2.0],   # incomparable to row 2
+    ])
+    rank = _fast_nondominated_rank(objs)
+    assert rank[0] < rank[1] < rank[2]
+    n = objs.shape[0]
+    for i in range(n):
+        for j in range(n):
+            if dominates(objs[i], objs[j]) or (
+                    i < j and np.array_equal(objs[i], objs[j])):
+                assert rank[i] < rank[j]
+
+
+def test_rank_and_crowding_jnp_matches_numpy():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        n = int(rng.integers(2, 32))
+        m = int(rng.integers(1, 5))
+        objs = rng.integers(0, 4, size=(n, m)).astype(np.float64)
+        r_np, c_np = rank_and_crowding(objs, "numpy")
+        r_j, c_j = rank_and_crowding(objs, "jnp")
+        assert np.array_equal(r_np, r_j)
+        fin = np.isfinite(c_np)
+        assert np.array_equal(fin, np.isfinite(c_j))
+        assert np.allclose(c_np[fin], c_j[fin], rtol=1e-5, atol=1e-6)
+
+
+def test_amosa_speculative_block_still_nondominated(small_problem):
+    spec, f, ev, ctx = small_problem
+    arch = amosa(spec, ev, ctx, spec.mesh_design(), seed=3, t_max=0.5,
+                 t_min=0.05, alpha=0.7, iters_per_temp=10, max_evals=150,
+                 block_size=8)
+    sub = arch.objs[:, list(ctx.obj_idx)]
+    for i in range(sub.shape[0]):
+        for j in range(sub.shape[0]):
+            if i != j:
+                assert not dominates(sub[i], sub[j])
 
 
 def test_neighbor_moves_preserve_invariants(small_problem):

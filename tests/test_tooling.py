@@ -1,0 +1,36 @@
+"""Benchmark-regression gate: the pure comparison logic of
+benchmarks/check_regression.py (the CLI wraps this)."""
+
+import importlib
+
+check_regression = importlib.import_module("benchmarks.check_regression")
+compare = check_regression.compare
+
+
+def test_compare_passes_within_threshold():
+    base = {"a_us": 100.0, "b_us": 50.0}
+    fresh = {"a_us": 120.0, "b_us": 74.0}
+    assert compare(base, fresh, 1.5, tracked=("a_us", "b_us")) == []
+
+
+def test_compare_flags_slowdown():
+    base = {"a_us": 100.0}
+    fresh = {"a_us": 151.0}
+    problems = compare(base, fresh, 1.5, tracked=("a_us",))
+    assert len(problems) == 1 and "a_us" in problems[0]
+
+
+def test_compare_missing_fresh_key_fails_and_new_baseline_key_skips():
+    base = {"a_us": 100.0}
+    fresh = {}
+    assert len(compare(base, fresh, 1.5, tracked=("a_us",))) == 1
+    # tracked key absent from the baseline (older baseline) is skipped
+    assert compare({}, {"a_us": 1e9}, 1.5, tracked=("a_us",)) == []
+
+
+def test_tracked_keys_exist_in_committed_baseline():
+    import json
+    with open(check_regression.BASELINE) as fh:
+        baseline = json.load(fh)
+    for key in check_regression.TRACKED:
+        assert key in baseline, key
