@@ -27,12 +27,17 @@ FRESH = os.path.join(os.path.dirname(_HERE), "BENCH_netsim.json")
 #: timing keys guarded against slowdowns (all microseconds, lower = better).
 #: The forest rows track each backend separately — the min-of-backends
 #: headline key would hide one backend regressing while the other stays fast.
+#: The reference paths are tracked too (ROADMAP: extend as kernels land) —
+#: they are the oracles every speedup is quoted against, and a silently
+#: slowed oracle inflates every reported speedup.
 TRACKED = (
     "vectorized_cold_us",
     "vectorized_warm_us",
+    "reference_us",
     "batch_us_per_sim",
     "forest_predict_4k_numpy_us",
     "forest_predict_4k_jnp_us",
+    "forest_reference_4k_us",
     "stage_meta_search_us_per_step",
 )
 

@@ -3,14 +3,18 @@
 Every application's NoC is cross-evaluated on every other application and
 on the leave-one-out AVG NoC; normalized EDP degradation is the paper's
 headline number (64-tile: 3.2% avg single-app, 1.1% AVG; 36-tile: 3.8% /
-1.8%; Fig. 11 repeats this under joint perf-thermal objectives)."""
+1.8%; Fig. 11 repeats this under joint perf-thermal objectives).
+
+The per-application optimizations route through the unified ``repro.noc``
+API (``optimize_for_traffic`` is a thin wrapper over the "stage" registry
+entry); the CLI twin is ``python -m repro.noc agnostic``."""
 
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import APP_NAMES, spec_16, spec_36
-from repro.core.agnostic import OptimizeBudget, run_agnostic_study, summarize
+from repro.noc import OptimizeBudget, run_agnostic_study, summarize
 
 from .common import Timer, row
 

@@ -1,0 +1,25 @@
+"""noc_cli_smoke — time the unified ``repro.noc`` CLI end to end.
+
+Runs ``python -m repro.noc run --smoke`` in-process: one registry run of
+MOO-STAGE on the tiny spec under a shared Budget, a RunResult JSON round
+trip, and the budget-accounting check. Guards the whole unified-API
+dispatch path (problem build → evaluator jit → registry → serialization)
+against breakage and gross slowdowns."""
+
+from __future__ import annotations
+
+from .common import Timer, row
+
+
+def main(reduced: bool = False) -> None:
+    from repro.noc import cli
+
+    with Timer() as t:
+        rc = cli.main(["run", "--smoke", "--quiet"])
+    if rc != 0:
+        raise RuntimeError(f"repro.noc run --smoke failed (rc={rc})")
+    row("noc_cli_smoke", t.dt * 1e6, f"rc={rc}")
+
+
+if __name__ == "__main__":
+    main()

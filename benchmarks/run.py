@@ -29,11 +29,11 @@ def main() -> None:
     t0 = time.perf_counter()
 
     from . import (fig4_throughput_model, fig6_convergence, fig8_eval_error,
-                   fig9_agnostic, fig10_thermal, kernel_bench,
+                   fig9_agnostic, fig10_thermal, kernel_bench, noc_cli,
                    roofline_bench, table2_speedup)
 
     takes_backend = (fig4_throughput_model, fig8_eval_error, table2_speedup)
-    mods = [kernel_bench, fig4_throughput_model, fig6_convergence,
+    mods = [kernel_bench, noc_cli, fig4_throughput_model, fig6_convergence,
             table2_speedup, fig8_eval_error, fig9_agnostic,
             fig10_thermal, roofline_bench]
     names = {m.__name__.rsplit(".", 1)[-1] for m in mods}

@@ -6,50 +6,47 @@ Speed-up metric: evaluations AMOSA needs to first reach within 3% of
 MOO-STAGE's best EDP, divided by the evaluations MOO-STAGE used to reach
 its best (the paper's T_AMOSA / T_MOO-STAGE protocol, Fig. 6 discussion).
 
-Forest scoring runs through the flat struct-of-arrays ``predict``; a
-``table2_multistart`` row additionally compares the batched K-chain driver
-(``stage_batch``) against the single-start run at equal evaluation
-budget."""
+Every optimizer runs through the unified ``repro.noc`` registry (equal
+:class:`~repro.noc.Budget` per comparison; the adapters reproduce the
+legacy driver calls exactly, so numbers match the pre-registry wiring at
+fixed seeds). Forest scoring runs through the flat struct-of-arrays
+``predict``; a ``table2_multistart`` row additionally compares the batched
+K-chain driver (``stage_batch``) against the single-start run at equal
+evaluation budget."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import APP_NAMES, traffic_matrix
-from repro.core.amosa import amosa
-from repro.core.local_search import SearchHistory
-from repro.core.pcbb import pcbb
-from repro.core.stage import moo_stage, stage_batch
+from repro.core import APP_NAMES
+from repro.noc import Budget, NocProblem, run as noc_run
 
-from .common import Timer, problem, row, spec_16, spec_36, spec_tiny
+from .common import Timer, row, spec_16, spec_36, spec_tiny
 
 
-def evals_to_reach(hist: SearchHistory, target: float) -> float:
-    arr = hist.as_array()
-    ok = arr[:, 2] <= target
-    return float(arr[ok, 1].min()) if ok.any() else np.inf
+def evals_to_reach(history: np.ndarray, target: float) -> float:
+    ok = history[:, 2] <= target
+    return float(history[ok, 1].min()) if ok.any() else np.inf
 
 
 def speedup(spec, app: str, case: str, stage_budget: int,
             amosa_budget: int, seed: int = 0,
             backend: str = "auto", forest_backend: str = "auto") -> float:
-    ev, ctx, mesh = problem(spec, app, case, backend=backend)
-    h_stage = SearchHistory(ev, ctx)
-    moo_stage(spec, ev, ctx, mesh, seed=seed, iters_max=6, n_swaps=12,
-              n_link_moves=12, max_local_steps=stage_budget, history=h_stage,
-              forest_kwargs={"backend": forest_backend})
-    arr = h_stage.as_array()
-    if arr.size == 0:
+    problem = NocProblem(spec=spec, traffic=app, case=case, backend=backend)
+    r_stage = noc_run(
+        problem, "stage", budget=Budget(seed=seed),
+        config=dict(iters_max=6, n_swaps=12, n_link_moves=12,
+                    max_local_steps=stage_budget,
+                    forest_kwargs={"backend": forest_backend}))
+    if r_stage.history.size == 0:
         return np.nan
-    best = arr[:, 2].min()
-    evals_stage = evals_to_reach(h_stage, best)
+    best = r_stage.history[:, 2].min()
+    evals_stage = evals_to_reach(r_stage.history, best)
 
-    ev2, ctx2, mesh2 = problem(spec, app, case, backend=backend)
-    h_amosa = SearchHistory(ev2, ctx2)
-    amosa(spec, ev2, ctx2, mesh2, seed=seed, t_max=1.0, t_min=1e-4,
-          alpha=0.92, iters_per_temp=40, max_evals=amosa_budget,
-          history=h_amosa)
-    evals_amosa = evals_to_reach(h_amosa, best * 1.03)
+    r_amosa = noc_run(
+        problem, "amosa", budget=Budget(max_evals=amosa_budget, seed=seed),
+        config=dict(t_max=1.0, t_min=1e-4, alpha=0.92, iters_per_temp=40))
+    evals_amosa = evals_to_reach(r_amosa.history, best * 1.03)
     if not np.isfinite(evals_amosa):
         evals_amosa = amosa_budget  # lower bound: never reached
     return evals_amosa / max(evals_stage, 1.0)
@@ -75,39 +72,39 @@ def main(reduced: bool = False, backend: str = "auto") -> None:
     # Batched multi-start vs single start at equal evaluation budget: the
     # K=4 lockstep driver should match or beat one chain's global PHV.
     spec_m = spec_tiny()
-    f_m = traffic_matrix(spec_m, "BFS")
+    problem_m = NocProblem(spec=spec_m, traffic="BFS", backend=backend)
     # Multi-start pays off once chains can reach their basins' local sets;
     # the tiny spec is cheap enough to keep the full budget even reduced.
     budget = 2000
+    cfg = dict(iters_max=30, n_swaps=8, n_link_moves=8, max_local_steps=1000)
     with Timer() as t:
-        r1 = stage_batch(spec_m, f_m, n_starts=1, seed=0, iters_max=30,
-                         n_swaps=8, n_link_moves=8, max_local_steps=1000,
-                         max_evals=budget, backend=backend)
-        r4 = stage_batch(spec_m, f_m, n_starts=4, seed=0, iters_max=30,
-                         n_swaps=8, n_link_moves=8, max_local_steps=1000,
-                         max_evals=budget, backend=backend)
-    ctx_m = r1.history.ctx
-    p1 = ctx_m.phv(r1.global_set.objs)
-    p4 = ctx_m.phv(r4.global_set.objs)
+        r1 = noc_run(problem_m, "stage_batch",
+                     budget=Budget(max_evals=budget, seed=0),
+                     config=dict(n_starts=1, **cfg))
+        r4 = noc_run(problem_m, "stage_batch",
+                     budget=Budget(max_evals=budget, seed=0),
+                     config=dict(n_starts=4, **cfg))
+    p1, p4 = r1.phv(), r4.phv()
     row("table2_multistart", t.dt * 1e6,
         f"phv_1start={p1:.4f};phv_4start={p4:.4f};ratio={p4/max(p1,1e-12):.3f};"
         f"budget={budget};evals={r1.n_evals}+{r4.n_evals}")
 
     # PCBB: tractable only at the tiny system (paper: 141x at 64 tiles).
     spec_p = spec_tiny()
-    ev, ctx, mesh = problem(spec_p, "BFS", "case1")
-    h = SearchHistory(ev, ctx)
-    with Timer() as t_stage:
-        moo_stage(spec_p, ev, ctx, mesh, seed=0, iters_max=4, n_swaps=8,
-                  n_link_moves=8, max_local_steps=25, history=h)
-    stage_evals = ev.n_evals
-    ev2, ctx2, _ = problem(spec_p, "BFS", "case1")
-    with Timer() as t_pcbb:
-        res = pcbb(spec_p, ev2, ctx2, seed=0, max_expansions=2000)
-    row("table2_pcbb_two-obj", t_pcbb.dt * 1e6,
-        f"pcbb_evals={ev2.n_evals};stage_evals={stage_evals};"
-        f"eval_ratio={ev2.n_evals/max(stage_evals,1):.1f}x;"
-        f"wall_ratio={t_pcbb.dt/max(t_stage.dt,1e-9):.1f}x")
+    problem_p = NocProblem(spec=spec_p, traffic="BFS", case="case1",
+                           backend=backend)
+    r_stage = noc_run(problem_p, "stage", budget=Budget(seed=0),
+                      config=dict(iters_max=4, n_swaps=8, n_link_moves=8,
+                                  max_local_steps=25))
+    stage_evals = r_stage.n_evals
+    r_pcbb = noc_run(problem_p, "pcbb", budget=Budget(seed=0),
+                     config=dict(max_expansions=2000))
+    # wall_s times the optimizers only (setup/jit excluded, as the legacy
+    # wiring kept them outside the Timer) — the ratio compares search work.
+    row("table2_pcbb_two-obj", r_pcbb.wall_s * 1e6,
+        f"pcbb_evals={r_pcbb.n_evals};stage_evals={stage_evals};"
+        f"eval_ratio={r_pcbb.n_evals/max(stage_evals,1):.1f}x;"
+        f"wall_ratio={r_pcbb.wall_s/max(r_stage.wall_s,1e-9):.1f}x")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,11 @@
 """The paper's headline experiment (Figs. 9/11): application-agnostic NoCs.
 
 Optimizes an application-specific NoC per application plus leave-one-out
-AVG NoCs, cross-evaluates EDP, and prints the degradation table.
+AVG NoCs, cross-evaluates EDP, and prints the degradation table. The study
+runs through the unified ``repro.noc`` API (every per-application
+optimization is a registry run of "stage"); the equivalent CLI is
+
+    PYTHONPATH=src python -m repro.noc agnostic --spec 16 --apps BFS,BP,...
 
     PYTHONPATH=src python examples/agnostic_noc.py [--full]
 """
@@ -11,7 +15,7 @@ import argparse
 import numpy as np
 
 from repro.core import APP_NAMES, spec_16, spec_36
-from repro.core.agnostic import OptimizeBudget, run_agnostic_study, summarize
+from repro.noc import OptimizeBudget, run_agnostic_study, summarize
 
 
 def main():

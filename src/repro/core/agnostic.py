@@ -13,23 +13,32 @@ import dataclasses
 import numpy as np
 
 from .evaluate import Evaluator
-from .local_search import SearchHistory
-from .objectives import CASES, peak_temperature_celsius, make_consts
-from .pareto import PhvContext
+from .objectives import make_consts, peak_temperature_celsius
 from .problem import Design, SystemSpec
-from .stage import moo_stage
 from .traffic import APP_NAMES, avg_traffic, traffic_matrix
 
 
 @dataclasses.dataclass
 class OptimizeBudget:
-    """Reduced-budget knobs for the container (paper ran hours on a Xeon)."""
+    """Reduced-budget knobs for the container (paper ran hours on a Xeon).
+
+    Legacy bundle kept for existing call sites; :meth:`to_noc` splits it
+    into the unified API's ``(Budget, StageConfig)`` pair."""
 
     iters_max: int = 4
     n_swaps: int = 16
     n_link_moves: int = 16
     max_local_steps: int = 40
     seed: int = 0
+
+    def to_noc(self):
+        """(repro.noc.Budget, repro.noc.StageConfig) for this bundle."""
+        from repro.noc import Budget, StageConfig
+
+        return (Budget(seed=self.seed),
+                StageConfig(iters_max=self.iters_max, n_swaps=self.n_swaps,
+                            n_link_moves=self.n_link_moves,
+                            max_local_steps=self.max_local_steps))
 
 
 def pick_min_edp(ev: Evaluator, designs: list[Design],
@@ -47,17 +56,18 @@ def optimize_for_traffic(
     case: str = "case3",
     budget: OptimizeBudget | None = None,
 ) -> tuple[Design, np.ndarray, Evaluator]:
+    """Thin wrapper over the unified ``repro.noc`` API: run MOO-STAGE on
+    one traffic matrix and return the min-EDP representative design (the
+    per-application optimization step of the agnostic study)."""
+    from repro.noc import NocProblem, run as noc_run
+
     budget = budget or OptimizeBudget()
-    ev = Evaluator(spec, f)
-    mesh = spec.mesh_design()
-    ctx = PhvContext(ev(mesh), CASES[case])
-    res = moo_stage(
-        spec, ev, ctx, mesh, seed=budget.seed,
-        iters_max=budget.iters_max, n_swaps=budget.n_swaps,
-        n_link_moves=budget.n_link_moves,
-        max_local_steps=budget.max_local_steps,
-    )
-    d, o = pick_min_edp(ev, res.global_set.designs, res.global_set.objs)
+    noc_budget, stage_cfg = budget.to_noc()
+    problem = NocProblem(spec=spec, traffic=f, case=case)
+    ev = problem.evaluator()
+    res = noc_run(problem, "stage", budget=noc_budget, config=stage_cfg,
+                  ev=ev)
+    d, o = pick_min_edp(ev, res.designs, np.asarray(res.objs))
     return d, o, ev
 
 

@@ -20,7 +20,15 @@ block on acceptance (the chain itself stays exactly sequential). The
 default is ``block_size=1``: discarded speculative evaluations count
 against ``max_evals``, so eval-budgeted baseline comparisons (Table 2 /
 Fig. 6) keep the sequential chain's exact accounting; raise it when
-wall-clock matters more than the budget bookkeeping."""
+wall-clock matters more than the budget bookkeeping.
+
+``adaptive_block=True`` reclaims most of the speculation waste: the block
+shrinks (halves) every time a proposal is accepted — while acceptance is
+hot, speculated candidates are usually discarded — and grows (doubles, up
+to ``block_max``) after a full block is consumed without an acceptance, as
+the cooling chain settles into long rejection runs where speculation is
+nearly free. Blocks are additionally clipped to the remaining ``max_evals``
+budget, so an adaptive run never evaluates past its budget."""
 
 from __future__ import annotations
 
@@ -78,7 +86,11 @@ def amosa(
     max_evals: int | None = None,
     history: SearchHistory | None = None,
     block_size: int = 1,
+    adaptive_block: bool = False,
+    block_max: int = 16,
 ) -> ParetoSet:
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
     rng = np.random.default_rng(seed)
     history = history or SearchHistory(ev, ctx)
 
@@ -87,6 +99,10 @@ def amosa(
     history.record(ev, cur, cur_obj)
     archive = ParetoSet.empty().merged_with([cur], cur_obj[None], ctx.obj_idx)
     block: list[tuple[Design, np.ndarray]] = []
+    # Adaptive mode starts from the configured block_size (default 1) and
+    # moves within [1, block_max] as the acceptance rate evolves.
+    cur_block = min(block_size, block_max) if adaptive_block else block_size
+    rejects_in_row = 0  # consecutive rejections since the last acceptance
 
     temp = t_max
     while temp > t_min:
@@ -97,8 +113,11 @@ def amosa(
                 # Speculatively evaluate a block of neighbors of ``cur`` in
                 # one padded batch; they stay valid proposals until ``cur``
                 # changes (acceptance clears the block below).
+                bs = cur_block
+                if max_evals is not None:
+                    bs = min(bs, max_evals - ev.n_evals)  # never overshoot
                 props: list[Design] = []
-                for _ in range(block_size):
+                for _ in range(bs):
                     cands = sample_neighbors(spec, cur, rng, 1, 1)
                     if cands:
                         props.append(cands[rng.integers(len(cands))])
@@ -148,5 +167,17 @@ def amosa(
                     )
             if accepted:
                 block.clear()  # remaining proposals are stale neighbors
+                rejects_in_row = 0
+                if adaptive_block:
+                    # Acceptance is hot: speculated evals mostly get thrown
+                    # away, so shrink the next block.
+                    cur_block = max(1, cur_block // 2)
+            else:
+                rejects_in_row += 1
+                if adaptive_block and rejects_in_row >= cur_block:
+                    # A full block survived without acceptance — the chain
+                    # is cooling; speculate deeper next time.
+                    cur_block = min(block_max, cur_block * 2)
+                    rejects_in_row = 0
         temp *= alpha
     return archive

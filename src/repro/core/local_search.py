@@ -72,11 +72,12 @@ def local_search(
     max_steps: int = 10_000,
     max_set: int = 24,
     history: "SearchHistory | None" = None,
+    max_evals: int | None = None,
 ) -> LocalResult:
     return local_search_batch(
         spec, ev, ctx, [d_start], rng,
         n_swaps=n_swaps, n_link_moves=n_link_moves, max_steps=max_steps,
-        max_set=max_set, history=history,
+        max_set=max_set, history=history, max_evals=max_evals,
     )[0]
 
 

@@ -64,7 +64,8 @@ def _complete_greedy(spec: SystemSpec, types: list[int], counts: dict[int, int],
                 remaining[t] -= 1
                 placed = True
                 break
-        assert placed
+        if not placed:
+            raise RuntimeError(f"greedy completion ran out of cores at slot {s}")
     return _types_to_perm(spec, out_types)
 
 
@@ -194,5 +195,8 @@ def pcbb(
         for b, nt, nc in sorted(children, key=lambda z: -z[0]):
             stack.append((nt, nc))
 
-    assert best_design is not None, "PCBB found no complete design"
+    if best_design is None:
+        raise RuntimeError(
+            "PCBB found no complete design — raise max_expansions "
+            f"(expanded {expanded}, pruned {pruned})")
     return PcbbResult(best_design, best_objs, pareto, expanded, pruned)

@@ -147,7 +147,11 @@ class SystemSpec:
                 adj[s, s + 1] = adj[s + 1, s] = True
             if x + 1 < self.nx:
                 adj[s, s + self.ny] = adj[s + self.ny, s] = True
-        assert int(np.triu(adj).sum()) == self.n_planar_links
+        n_links = int(np.triu(adj).sum())
+        if n_links != self.n_planar_links:
+            raise RuntimeError(
+                f"mesh link budget mismatch: built {n_links}, "
+                f"expected {self.n_planar_links}")
         return Design(perm=np.arange(n, dtype=np.int32), adj=adj)
 
 
@@ -187,7 +191,12 @@ class Design:
         return self.perm.tobytes() + np.packbits(self.adj).tobytes()
 
     # ------------------------------------------------------------- moves
+    # Move validation raises real exceptions (not ``assert``): asserts are
+    # stripped under ``python -O``, which would let an invalid move silently
+    # corrupt the link budget / placement permutation.
     def swap_tiles(self, a: int, b: int) -> "Design":
+        if a == b:
+            raise ValueError(f"swap_tiles: slots must differ, got {a} twice")
         d = self.copy()
         d.perm[a], d.perm[b] = d.perm[b], d.perm[a]
         return d
@@ -195,9 +204,14 @@ class Design:
     def move_link(self, rem: tuple[int, int], add: tuple[int, int]) -> "Design":
         d = self.copy()
         (a, b), (c, e) = rem, add
-        assert d.adj[a, b], "removing a non-existent link"
+        if a == b or c == e:
+            raise ValueError(f"move_link: self-links are invalid "
+                             f"(rem={rem}, add={add})")
+        if not d.adj[a, b]:
+            raise ValueError(f"move_link: removing non-existent link {rem}")
         d.adj[a, b] = d.adj[b, a] = False
-        assert not d.adj[c, e]
+        if d.adj[c, e]:
+            raise ValueError(f"move_link: adding already-present link {add}")
         d.adj[c, e] = d.adj[e, c] = True
         return d
 

@@ -92,7 +92,11 @@ def moo_stage(
     max_local_steps: int = 10_000,
     forest_kwargs: dict | None = None,
     history: SearchHistory | None = None,
+    max_evals: int | None = None,
 ) -> StageResult:
+    """Single-start MOO-STAGE. ``max_evals`` bounds the total objective
+    evaluations (absolute w.r.t. ``ev.n_evals``, same accounting as
+    :func:`stage_batch`); ``None`` keeps the legacy unbudgeted behavior."""
     rng = np.random.default_rng(seed)
     history = history or SearchHistory(ev, ctx)
     s_global = ParetoSet.empty()
@@ -102,8 +106,11 @@ def moo_stage(
     model: RegressionForest | None = None
     d_start = d0
     converged = False
+    n_local = 0
 
     for it in range(iters_max):
+        if max_evals is not None and ev.n_evals >= max_evals:
+            break
         predicted = (
             float(model.predict(design_features_batch(spec, [d_start]))[0])
             if model is not None
@@ -112,8 +119,9 @@ def moo_stage(
         res: LocalResult = local_search(
             spec, ev, ctx, d_start, rng,
             n_swaps=n_swaps, n_link_moves=n_link_moves,
-            max_steps=max_local_steps, history=history,
+            max_steps=max_local_steps, history=history, max_evals=max_evals,
         )
+        n_local += 1
         if predicted is not None and res.phv > 0:
             eval_errors.append((it, abs(predicted - res.phv) / res.phv))
 
@@ -152,7 +160,7 @@ def moo_stage(
         global_set=s_global,
         history=history,
         eval_errors=eval_errors,
-        n_local_searches=it + 1,
+        n_local_searches=n_local,
         converged=converged,
     )
 
