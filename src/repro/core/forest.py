@@ -13,40 +13,88 @@ tensor. ``predict`` traverses all trees for all samples in one vectorized
 pass — a (T, B) node-pointer array advanced ``depth`` times with flat
 gathers — with a backend switch mirroring core.routing:
 
-  * ``"numpy"`` — the oracle; bit-equal to the recursive traversal
+  * ``"numpy"``  — the oracle; bit-equal to the recursive traversal
     (``predict_reference``), pinned by golden tests.
-  * ``"jnp"``   — jit-compiled float32 traversal (``lax.fori_loop`` over
+  * ``"jnp"``    — jit-compiled float32 traversal (``lax.fori_loop`` over
     depth), batch-padded to a power of two so meta-search can fuse scoring;
     agrees with numpy up to f32 threshold rounding.
-  * ``"auto"``  — ``"jnp"`` on TPU/GPU, ``"numpy"`` elsewhere.
+  * ``"pallas"`` — the blocked VMEM-resident traversal kernel in
+    kernels/forest (grid over batch blocks, node tensors pinned across the
+    grid). TPU only; ``interpret=True`` runs it on CPU (tests); requesting
+    it on a CPU/GPU host without interpret falls back to jnp with a
+    one-time warning (same contract as core.routing's backend switch —
+    never fail inside jit because of the host platform).
+  * ``"auto"``   — ``"pallas"`` on TPU, ``"jnp"`` on GPU, numpy/jnp by
+    batch size on CPU (DESIGN.md §4.4).
 """
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import numpy as np
 
-FOREST_BACKENDS = ("auto", "numpy", "jnp")
+FOREST_BACKENDS = ("auto", "numpy", "jnp", "pallas")
+
+_PALLAS_FALLBACK_WARNED = False
+#: set after an on-device kernel failure — resolution then routes every
+#: non-interpret pallas request (including auto-on-TPU) to jnp so one
+#: Mosaic lowering failure cannot crash every subsequent surrogate predict.
+_PALLAS_DISABLED = False
+
+
+def check_forest_backend(backend: str | None, *,
+                         allow_none: bool = False) -> None:
+    """Shared membership check for every forest_backend knob (the forest
+    itself, resolution, NocProblem, the stage configs) — one error
+    message, one maintenance site. ``allow_none`` admits the configs'
+    "inherit the problem's knob" sentinel."""
+    if backend is None and allow_none:
+        return
+    if backend not in FOREST_BACKENDS:
+        raise ValueError(
+            f"forest_backend must be one of {FOREST_BACKENDS}, "
+            f"got {backend!r}")
 
 
 def resolve_forest_backend(backend: str | None = None,
-                           batch: int | None = None) -> str:
-    """Resolve ``backend`` (default ``"auto"``) to ``"numpy"`` or ``"jnp"``.
+                           batch: int | None = None,
+                           interpret: bool = False) -> str:
+    """Resolve ``backend`` (default ``"auto"``) to a concrete one.
 
-    ``auto`` always picks jnp on an accelerator; on CPU it picks numpy for
-    small (neighborhood-sized) batches, where per-call dispatch dominates,
-    and the jitted jnp traversal for large ones."""
+    ``auto`` picks the Pallas kernel on TPU and jnp on GPU; on CPU it picks
+    numpy for small (neighborhood-sized) batches, where per-call dispatch
+    dominates, and the jitted jnp traversal for large ones. An explicit
+    ``"pallas"`` on a host without a TPU resolves to ``"jnp"`` with a
+    one-time warning unless ``interpret`` is set (the interpreter runs the
+    kernel anywhere)."""
+    global _PALLAS_FALLBACK_WARNED
     b = backend if backend is not None else "auto"
-    if b not in FOREST_BACKENDS:
-        raise ValueError(f"backend must be one of {FOREST_BACKENDS}, got {b!r}")
+    check_forest_backend(b)
     if b == "auto":
         import jax
 
-        if jax.default_backend() in ("tpu", "gpu"):
+        platform = jax.default_backend()
+        if platform == "tpu":
+            b = "pallas"
+        elif platform == "gpu":
             b = "jnp"
         else:
             b = "numpy" if batch is not None and batch < 512 else "jnp"
+    if b == "pallas" and not interpret:
+        import jax
+
+        if _PALLAS_DISABLED:
+            b = "jnp"
+        elif jax.default_backend() != "tpu":
+            if not _PALLAS_FALLBACK_WARNED:
+                warnings.warn(
+                    "forest backend 'pallas' requires a TPU (or "
+                    "interpret=True); falling back to 'jnp' on "
+                    f"{jax.default_backend()!r}", stacklevel=2)
+                _PALLAS_FALLBACK_WARNED = True
+            b = "jnp"
     return b
 
 
@@ -196,14 +244,13 @@ class RegressionForest:
         self.max_depth = max_depth
         self.min_leaf = min_leaf
         self.backend = backend
-        if backend not in FOREST_BACKENDS:  # fail fast, but don't touch jax
-            raise ValueError(
-                f"backend must be one of {FOREST_BACKENDS}, got {backend!r}")
+        check_forest_backend(backend)  # fail fast, but don't touch jax
         self.rng = np.random.default_rng(seed)
         self.trees: list[_Tree] = []
         self._xm = self._xs = None
-        self._flat = None       # packed (T, M) numpy tensors
-        self._flat_jnp = None   # f32 device copies, built on first jnp call
+        self._flat = None        # packed (T, M) numpy tensors
+        self._flat_jnp = None    # f32 device copies, built on first jnp call
+        self._flat_pallas = None  # kernel-layout copies, first pallas call
 
     def fit(self, x: np.ndarray, y: np.ndarray) -> "RegressionForest":
         x = np.asarray(x, np.float64)
@@ -260,17 +307,25 @@ class RegressionForest:
             "depth": depth, "n_nodes": m,
         }
         self._flat_jnp = None
+        self._flat_pallas = None
 
     # -------------------------------------------------------------- predict
     def _normalize(self, x: np.ndarray) -> np.ndarray:
         x = np.atleast_2d(np.asarray(x, np.float64))
         return (x - self._xm) / self._xs
 
-    def predict(self, x: np.ndarray, backend: str | None = None) -> np.ndarray:
-        """(B,) forest mean via the flat vectorized traversal."""
+    def predict(self, x: np.ndarray, backend: str | None = None,
+                interpret: bool = False) -> np.ndarray:
+        """(B,) forest mean via the flat vectorized traversal.
+
+        ``interpret`` only affects the pallas backend: it runs the blocked
+        kernel through the Pallas interpreter so the TPU code path is
+        exercised on CPU (tests, CI smoke)."""
         xn = self._normalize(x)
         b = resolve_forest_backend(backend if backend is not None else self.backend,
-                                   batch=xn.shape[0])
+                                   batch=xn.shape[0], interpret=interpret)
+        if b == "pallas":
+            return self._predict_pallas(xn, interpret=interpret)
         if b == "jnp":
             return self._predict_jnp(xn)
         return self._predict_numpy(xn)
@@ -341,3 +396,53 @@ class RegressionForest:
                            depth=fl["depth"], n_trees=len(self.trees),
                            n_nodes=fl["n_nodes"])
         return np.asarray(out[:b], np.float64)
+
+    def _predict_pallas(self, xn: np.ndarray, interpret: bool = False) -> np.ndarray:
+        """Blocked Pallas traversal (kernels/forest): per-tree-local node
+        tensors resident in VMEM, grid over batch blocks. Branch decisions
+        match the jnp twin exactly (same f32 compares); both agree with the
+        f64 numpy oracle up to f32 threshold rounding."""
+        import jax.numpy as jnp
+
+        from ..kernels import forest as _forest  # deferred: keeps core importable sans kernels
+
+        if self._flat_pallas is None:
+            fl = self._flat
+            t, m = fl["feature"].shape
+            child = np.empty((t, 2 * m), np.int32)
+            child[:, 0::2] = fl["left"]
+            child[:, 1::2] = fl["right"]
+            self._flat_pallas = (
+                jnp.asarray(fl["threshold"], jnp.float32),
+                jnp.asarray(np.maximum(fl["feature"], 0), jnp.int32),
+                jnp.asarray(child),
+                jnp.asarray(fl["value"], jnp.float32),
+            )
+        # Pad the batch to a block multiple *outside* the jitted call so
+        # the jit cache keys on the quantized shape — one compile per
+        # forest shape, not one per raw neighborhood size (the same
+        # retrace-bounding trick as _predict_jnp's power-of-two padding).
+        b = xn.shape[0]
+        bp = -(-b // _forest.BLOCK_B) * _forest.BLOCK_B
+        xp = np.zeros((bp, xn.shape[1]), np.float32)
+        xp[:b] = xn
+        try:
+            out = _forest.forest_predict(
+                *self._flat_pallas, jnp.asarray(xp),
+                depth=self._flat["depth"], interpret=interpret)[:b]
+        except Exception as e:
+            if interpret:
+                raise
+            # On-device escape hatch: if Mosaic rejects the kernel on real
+            # hardware, disable it for the process and serve the jnp twin —
+            # "auto" must never crash an optimizer run mid-search.
+            global _PALLAS_DISABLED
+            if not _PALLAS_DISABLED:
+                warnings.warn(
+                    "pallas forest kernel failed on this device "
+                    f"({type(e).__name__}: {e}); disabling it and falling "
+                    "back to 'jnp' for the rest of the process",
+                    stacklevel=2)
+                _PALLAS_DISABLED = True
+            return self._predict_jnp(xn)
+        return np.asarray(out, np.float64)

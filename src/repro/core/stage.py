@@ -28,6 +28,16 @@ from .pareto import PhvContext
 from .problem import Design, SystemSpec, random_design, sample_neighbors
 
 
+def _merge_forest_kwargs(forest_kwargs: dict | None,
+                         forest_backend: str | None) -> dict:
+    """Surrogate construction kwargs with the backend knob folded in; an
+    explicit ``backend`` inside ``forest_kwargs`` wins over the knob."""
+    fk = dict(forest_kwargs or {})
+    if forest_backend is not None:
+        fk.setdefault("backend", forest_backend)
+    return fk
+
+
 @dataclasses.dataclass
 class StageResult:
     global_set: ParetoSet
@@ -91,12 +101,15 @@ def moo_stage(
     n_link_moves: int = 24,
     max_local_steps: int = 10_000,
     forest_kwargs: dict | None = None,
+    forest_backend: str | None = None,
     history: SearchHistory | None = None,
     max_evals: int | None = None,
 ) -> StageResult:
     """Single-start MOO-STAGE. ``max_evals`` bounds the total objective
     evaluations (absolute w.r.t. ``ev.n_evals``, same accounting as
-    :func:`stage_batch`); ``None`` keeps the legacy unbudgeted behavior."""
+    :func:`stage_batch`); ``None`` keeps the legacy unbudgeted behavior.
+    ``forest_backend`` selects the surrogate inference backend
+    (core.forest.FOREST_BACKENDS; ``None`` keeps the forest's ``"auto"``)."""
     rng = np.random.default_rng(seed)
     history = history or SearchHistory(ev, ctx)
     s_global = ParetoSet.empty()
@@ -142,7 +155,7 @@ def moo_stage(
         x_train.extend(design_features_batch(spec, res.traj))
         y_train.extend([res.phv] * len(res.traj))
 
-        fk = forest_kwargs or {}
+        fk = _merge_forest_kwargs(forest_kwargs, forest_backend)
         model = RegressionForest(seed=seed + it, **fk).fit(
             np.stack(x_train), np.asarray(y_train)
         )
@@ -178,6 +191,7 @@ def stage_batch(
     n_link_moves: int = 24,
     max_local_steps: int = 10_000,
     forest_kwargs: dict | None = None,
+    forest_backend: str | None = None,
     max_evals: int | None = None,
     ev: Evaluator | None = None,
     ctx: PhvContext | None = None,
@@ -198,7 +212,9 @@ def stage_batch(
 
     ``max_evals`` bounds the total objective-evaluation budget across all
     chains (checked per lockstep step), making equal-budget comparisons
-    against the single-start driver direct.
+    against the single-start driver direct. ``forest_backend`` selects the
+    shared surrogate's inference backend (core.forest.FOREST_BACKENDS;
+    ``None`` keeps the forest's ``"auto"``).
     """
     from .objectives import CASES
 
@@ -263,7 +279,7 @@ def stage_batch(
         if max_evals is not None and ev.n_evals >= max_evals:
             break
 
-        fk = forest_kwargs or {}
+        fk = _merge_forest_kwargs(forest_kwargs, forest_backend)
         model = RegressionForest(seed=seed + it, **fk).fit(
             np.stack(x_train), np.asarray(y_train)
         )

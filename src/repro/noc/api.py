@@ -62,7 +62,11 @@ class NocProblem:
       * an explicit (N, N) flit-rate matrix.
 
     ``case`` selects the objective subset (``repro.core.objectives.CASES``);
-    ``backend`` selects the batched-APSP routing backend (core.routing).
+    ``backend`` selects the batched-APSP routing backend (core.routing);
+    ``forest_backend`` selects the surrogate inference backend for the
+    learning-based optimizers (core.forest.FOREST_BACKENDS — the forest
+    backend triangle, DESIGN.md §4.4; ignored by the non-learning
+    baselines).
 
     Equality/hashing go through the canonical JSON form (the generated
     dataclass ``__eq__`` would crash on ndarray traffic), so problems can
@@ -73,11 +77,15 @@ class NocProblem:
     traffic: Any = "BFS"
     case: str = "case3"
     backend: str = "auto"
+    forest_backend: str = "auto"
 
     def __post_init__(self):
+        from repro.core.forest import check_forest_backend
+
         if self.case not in CASES:
             raise ValueError(
                 f"unknown case {self.case!r}; choose from {tuple(CASES)}")
+        check_forest_backend(self.forest_backend)
 
     def _canonical(self) -> str:
         # Cached: the dataclass is frozen, and re-serializing a 64-tile
@@ -131,7 +139,8 @@ class NocProblem:
         else:
             traffic = {"matrix": np.asarray(t, dtype=np.float64).tolist()}
         return {"spec": dataclasses.asdict(self.spec), "traffic": traffic,
-                "case": self.case, "backend": self.backend}
+                "case": self.case, "backend": self.backend,
+                "forest_backend": self.forest_backend}
 
     @staticmethod
     def from_json(obj: dict) -> "NocProblem":
@@ -143,7 +152,8 @@ class NocProblem:
         else:
             traffic = np.asarray(t["matrix"], dtype=np.float64)
         return NocProblem(spec=SystemSpec(**obj["spec"]), traffic=traffic,
-                          case=obj["case"], backend=obj.get("backend", "auto"))
+                          case=obj["case"], backend=obj.get("backend", "auto"),
+                          forest_backend=obj.get("forest_backend", "auto"))
 
 
 # --------------------------------------------------------------------------

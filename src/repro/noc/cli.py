@@ -50,6 +50,9 @@ def _problem_args(ap: argparse.ArgumentParser) -> None:
                     help="objective case (case1..case5, default case3)")
     ap.add_argument("--backend", default="auto",
                     help="routing backend auto|jnp|pallas (default auto)")
+    ap.add_argument("--forest-backend", default="auto",
+                    help="surrogate inference backend auto|numpy|jnp|pallas "
+                         "(default auto; pallas falls back to jnp off-TPU)")
 
 
 def _budget_args(ap: argparse.ArgumentParser) -> None:
@@ -61,7 +64,8 @@ def _budget_args(ap: argparse.ArgumentParser) -> None:
 def _build_problem(args) -> NocProblem:
     traffic = tuple(args.avg.split(",")) if args.avg else args.app
     return NocProblem(spec=named_spec(args.spec), traffic=traffic,
-                      case=args.case, backend=args.backend)
+                      case=args.case, backend=args.backend,
+                      forest_backend=args.forest_backend)
 
 
 def _summary_line(res: RunResult) -> str:

@@ -26,6 +26,7 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core.amosa import amosa
+from repro.core.forest import check_forest_backend
 from repro.core.local_search import ParetoSet, local_search_batch
 from repro.core.nsga2 import nsga2
 from repro.core.pcbb import pcbb
@@ -40,18 +41,30 @@ from .api import Budget, NocProblem
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class StageConfig:
-    """MOO-STAGE (Alg. 2) knobs — see :func:`repro.core.stage.moo_stage`."""
+    """MOO-STAGE (Alg. 2) knobs — see :func:`repro.core.stage.moo_stage`.
+
+    ``forest_backend`` overrides the problem's surrogate inference backend
+    (``None`` inherits ``NocProblem.forest_backend``)."""
 
     iters_max: int = 12
     n_swaps: int = 24
     n_link_moves: int = 24
     max_local_steps: int = 10_000
     forest_kwargs: dict | None = None
+    forest_backend: str | None = None
+
+    def __post_init__(self):
+        # Fail at config construction, not at the first surrogate refit
+        # after the initial evaluation budget has already been spent.
+        check_forest_backend(self.forest_backend, allow_none=True)
 
 
 @dataclasses.dataclass(frozen=True)
 class StageBatchConfig:
-    """Multi-start MOO-STAGE — see :func:`repro.core.stage.stage_batch`."""
+    """Multi-start MOO-STAGE — see :func:`repro.core.stage.stage_batch`.
+
+    ``forest_backend`` overrides the problem's surrogate inference backend
+    (``None`` inherits ``NocProblem.forest_backend``)."""
 
     n_starts: int = 4
     iters_max: int = 12
@@ -59,6 +72,10 @@ class StageBatchConfig:
     n_link_moves: int = 24
     max_local_steps: int = 10_000
     forest_kwargs: dict | None = None
+    forest_backend: str | None = None
+
+    def __post_init__(self):
+        check_forest_backend(self.forest_backend, allow_none=True)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,8 +190,10 @@ def _run_stage(problem: NocProblem, budget: Budget, cfg: StageConfig,
         problem.spec, ev, ctx, problem.mesh(), seed=budget.seed,
         iters_max=cfg.iters_max, n_swaps=cfg.n_swaps,
         n_link_moves=cfg.n_link_moves, max_local_steps=cfg.max_local_steps,
-        forest_kwargs=cfg.forest_kwargs, history=history,
-        max_evals=budget.max_evals,
+        forest_kwargs=cfg.forest_kwargs,
+        forest_backend=(cfg.forest_backend if cfg.forest_backend is not None
+                        else problem.forest_backend),
+        history=history, max_evals=budget.max_evals,
     )
     return res.global_set, {
         "converged": res.converged,
@@ -192,6 +211,8 @@ def _run_stage_batch(problem: NocProblem, budget: Budget,
         seed=budget.seed, case=problem.case, iters_max=cfg.iters_max,
         n_swaps=cfg.n_swaps, n_link_moves=cfg.n_link_moves,
         max_local_steps=cfg.max_local_steps, forest_kwargs=cfg.forest_kwargs,
+        forest_backend=(cfg.forest_backend if cfg.forest_backend is not None
+                        else problem.forest_backend),
         max_evals=budget.max_evals, ev=ev, ctx=ctx, history=history,
     )
     return res.global_set, {

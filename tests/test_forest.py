@@ -73,12 +73,17 @@ def test_constant_y_degenerate_fit():
 
 def test_backend_validation_and_resolution():
     with pytest.raises(ValueError):
-        RegressionForest(backend="pallas")
+        RegressionForest(backend="bogus")
     with pytest.raises(ValueError):
         resolve_forest_backend("bogus")
     assert resolve_forest_backend("numpy") == "numpy"
     assert resolve_forest_backend("jnp") == "jnp"
-    assert resolve_forest_backend("auto", batch=4096) in ("numpy", "jnp")
+    assert resolve_forest_backend("auto", batch=4096) in ("numpy", "jnp",
+                                                          "pallas")
+    # "pallas" is a first-class backend (third leg of the conformance
+    # triangle); its off-TPU fallback is pinned in test_forest_conformance.
+    assert RegressionForest(backend="pallas").backend == "pallas"
+    assert resolve_forest_backend("pallas", interpret=True) == "pallas"
 
 
 def test_single_sample_and_1d_input():

@@ -105,6 +105,49 @@ def test_runresult_nonfinite_extra_roundtrips(tmp_path):
     assert back.config == {"iters_max": 3, "scale": 1.5}
 
 
+def _canonical_run_json(res: RunResult) -> str:
+    """RunResult JSON with the only nondeterministic fields — wall-clock
+    seconds (``wall_s`` and the history rows' wall column) — zeroed; every
+    other byte must reproduce for a fixed (problem, budget, seed)."""
+    j = res.to_json()
+    j["wall_s"] = 0.0
+    j["history"] = [[0.0] + row[1:] for row in j["history"]]
+    return json.dumps(j, sort_keys=True)
+
+
+@pytest.mark.parametrize("name", ["stage", "stage_batch"])
+@pytest.mark.parametrize("forest_backend", ["numpy", "jnp"])
+def test_registry_run_seeded_determinism(name, forest_backend):
+    """Two registry runs with the same (NocProblem, Budget, seed) produce
+    byte-identical RunResult JSON (wall-clock excluded) for both surrogate
+    backends — the reproducibility contract the ROADMAP's distributed
+    multi-start item merges workers on."""
+    problem = NocProblem(spec=spec_tiny(), traffic="BFS", case="case3",
+                         forest_backend=forest_backend)
+    budget = Budget(max_evals=150, seed=3)
+    first, second = (
+        _canonical_run_json(run(problem, name, budget=budget,
+                                config=SMALL_CONFIGS[name]))
+        for _ in range(2))
+    assert problem.forest_backend in first  # knob serialized with the run
+    assert first == second
+
+
+def test_forest_backend_validated_at_construction():
+    """A bad forest_backend fails fast — at NocProblem/config construction,
+    not at the first surrogate refit after evaluations were spent."""
+    from repro.noc import StageBatchConfig, StageConfig
+
+    with pytest.raises(ValueError, match="forest_backend"):
+        NocProblem(spec=spec_tiny(), traffic="BFS", forest_backend="bogus")
+    with pytest.raises(ValueError, match="forest_backend"):
+        StageConfig(forest_backend="bogus")
+    with pytest.raises(ValueError, match="forest_backend"):
+        StageBatchConfig(forest_backend="bogus")
+    assert StageConfig(forest_backend="pallas").forest_backend == "pallas"
+    assert StageConfig().forest_backend is None  # inherit the problem's
+
+
 def test_run_with_prespent_budget_reports_exhausted(tiny_problem):
     """A budget already consumed at entry yields an empty result that is
     consistently flagged exhausted=True for every driver (nothing was
