@@ -41,6 +41,7 @@ TRACKED = (
     "forest_pallas_4k_us",
     "forest_pallas_interp_512_us",
     "stage_meta_search_us_per_step",
+    "stage_dist_4w_us",
 )
 
 

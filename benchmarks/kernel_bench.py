@@ -156,6 +156,28 @@ def main(reduced: bool = False) -> None:
         f"us_per_step;neighborhood=48;steps<={steps}")
     bench["stage_meta_search_us_per_step"] = t_meta / steps * 1e6
 
+    # Distributed multi-start dispatch: 4 process workers (spawn start
+    # method — each child pays interpreter + jax import, which dominates
+    # this row; the search itself is a small spec_tiny budget). Tracks the
+    # coordinator round trip: plan -> ProcessPoolExecutor fan-out ->
+    # Pareto-union merge. Timed once: the spawn cost IS the measurement,
+    # and it is stable (import-bound, not load-bound).
+    from repro.core import spec_tiny
+    from repro.noc.api import Budget, NocProblem
+    from repro.noc.api import run as noc_run
+
+    dist_problem = NocProblem(spec=spec_tiny(), traffic="BFS")
+    dist_cfg = {"n_workers": 4, "executor": "process", "iters_max": 2,
+                "n_swaps": 6, "n_link_moves": 6, "max_local_steps": 20}
+    with Timer() as t:
+        dist_res = noc_run(dist_problem, "stage_dist",
+                           budget=Budget(max_evals=400, seed=0),
+                           config=dist_cfg)
+    row("stage_dist_4w", t.dt * 1e6,
+        f"workers=4;process;evals={dist_res.n_evals};"
+        f"pareto={len(dist_res.designs)}")
+    bench["stage_dist_4w_us"] = t.dt * 1e6
+
     out = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                        "BENCH_netsim.json")
     with open(out, "w") as fh:

@@ -46,6 +46,31 @@ class ParetoSet:
         mask = pareto_mask(allo[:, list(obj_idx)])
         return ParetoSet([d for d, m in zip(alld, mask) if m], allo[mask])
 
+    @staticmethod
+    def canonical_union(sets: "list[ParetoSet]", obj_idx) -> "ParetoSet":
+        """Order-independent Pareto union: a pure function of the input
+        *set* of (design, objectives) pairs — any permutation of ``sets``
+        (or of the rows inside them) yields bit-identical output.
+
+        ``merged_with`` accumulates in arrival order, and ``pareto_mask``
+        keeps the *first* of exact-tied rows, so which tied design
+        survives depends on that order. Here all pairs are deduplicated
+        and canonically sorted by (objective row, design key) before the
+        mask runs — the determinism a distributed merge needs when worker
+        results arrive in pool-completion order (repro.dist.merge)."""
+        pairs: dict[tuple, tuple] = {}
+        for ps in sets:
+            objs = np.asarray(ps.objs, dtype=np.float64)
+            for d, o in zip(ps.designs, objs):
+                pairs.setdefault((tuple(o.tolist()), d.key()), (d, o))
+        if not pairs:
+            return ParetoSet.empty()
+        order = sorted(pairs)
+        designs = [pairs[k][0] for k in order]
+        objs = np.stack([pairs[k][1] for k in order])
+        mask = pareto_mask(objs[:, list(obj_idx)])
+        return ParetoSet([d for d, m in zip(designs, mask) if m], objs[mask])
+
     def keys(self) -> set[bytes]:
         return {d.key() for d in self.designs}
 

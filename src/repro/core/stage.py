@@ -50,7 +50,13 @@ class StageResult:
 @dataclasses.dataclass
 class StageBatchResult:
     """Multi-start MOO-STAGE outcome: one global Pareto set merged across
-    all K chains plus the usual diagnostics."""
+    all K chains plus the usual diagnostics.
+
+    ``x_train``/``y_train`` are the surrogate training rows collected by
+    THIS call only (``train_init`` rows are not echoed back), and
+    ``next_starts`` are the designs the driver would have restarted from
+    next — together they are the checkpoint a distributed coordinator
+    pools between sync rounds (repro.dist.sync)."""
 
     global_set: ParetoSet
     history: SearchHistory
@@ -59,6 +65,11 @@ class StageBatchResult:
     n_starts: int
     n_evals: int
     converged: bool
+    x_train: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0, 0)))
+    y_train: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,)))
+    next_starts: list[Design] = dataclasses.field(default_factory=list)
 
 
 def _meta_greedy(
@@ -197,6 +208,10 @@ def stage_batch(
     ctx: PhvContext | None = None,
     history: SearchHistory | None = None,
     d0: Design | None = None,
+    starts: list[Design] | None = None,
+    train_init: tuple[np.ndarray, np.ndarray] | None = None,
+    global_init: ParetoSet | None = None,
+    checkpoint_restarts: bool = False,
 ) -> StageBatchResult:
     """Multi-start MOO-STAGE: K restart chains advanced in lockstep.
 
@@ -215,6 +230,21 @@ def stage_batch(
     against the single-start driver direct. ``forest_backend`` selects the
     shared surrogate's inference backend (core.forest.FOREST_BACKENDS;
     ``None`` keeps the forest's ``"auto"``).
+
+    ``starts`` overrides the mesh-perturbation start construction with
+    explicit per-chain designs (len must equal ``n_starts``);
+    ``train_init`` is an ``(X, y)`` pair of surrogate training rows fitted
+    into a model *before* the first iteration; ``global_init`` seeds the
+    global non-dominated set (its designs cost no evaluations — their
+    objective rows ride along), so chains greedily maximize *marginal*
+    PHV over what other workers already found. Together they let a
+    round-based coordinator (repro.dist.sync) resume K chains with a
+    pooled cross-worker surrogate and front. ``checkpoint_restarts``
+    additionally refits the surrogate on convergence (an eval-free meta
+    search) so ``next_starts`` holds genuine restart designs instead of
+    the already-locally-optimal ``d_last``s. All default to
+    None/False, leaving the single-call behavior (and its
+    seeded-determinism pin) unchanged.
     """
     from .objectives import CASES
 
@@ -227,23 +257,43 @@ def stage_batch(
         ctx = PhvContext(ev(spec.mesh_design()), CASES[case])
     history = history or SearchHistory(ev, ctx)
 
-    base = d0 or spec.mesh_design()
-    starts = [base]
-    for i in range(1, n_starts):
-        d = base
-        for _ in range(2 * i):  # chain i: 2·i random moves away from base
-            nb = sample_neighbors(spec, d, rng, 1, 1)
-            if nb:
-                d = nb[int(rng.integers(len(nb)))]
-        starts.append(d)
+    if starts is None:
+        base = d0 or spec.mesh_design()
+        starts = [base]
+        for i in range(1, n_starts):
+            d = base
+            for _ in range(2 * i):  # chain i: 2·i random moves away from base
+                nb = sample_neighbors(spec, d, rng, 1, 1)
+                if nb:
+                    d = nb[int(rng.integers(len(nb)))]
+            starts.append(d)
+    else:
+        if len(starts) != n_starts:
+            raise ValueError(
+                f"explicit starts must have n_starts={n_starts} designs, "
+                f"got {len(starts)}")
+        starts = list(starts)
 
-    s_global = ParetoSet.empty()
+    s_global = global_init if global_init is not None else ParetoSet.empty()
     x_train: list[np.ndarray] = []
     y_train: list[float] = []
     eval_errors: list[tuple[int, float]] = []
+    fk = _merge_forest_kwargs(forest_kwargs, forest_backend)
+    x_init = y_init = None
     model: RegressionForest | None = None
+    if train_init is not None:
+        x_init = np.asarray(train_init[0], dtype=np.float64)
+        y_init = np.asarray(train_init[1], dtype=np.float64)
+        if x_init.shape[0] != y_init.shape[0]:
+            raise ValueError("train_init X and y row counts differ")
+        if x_init.shape[0]:
+            # Warm surrogate: seeded past the per-iteration range (it <
+            # iters_max) so the entry fit never collides with a refit seed.
+            model = RegressionForest(seed=seed + iters_max, **fk).fit(
+                x_init, y_init)
     converged = False
     n_local = 0
+    next_starts = list(starts)
 
     for it in range(iters_max):
         if max_evals is not None and ev.n_evals >= max_evals:
@@ -260,6 +310,7 @@ def stage_batch(
             seed_set=s_global if s_global.designs else None,
         )
         n_local += len(results)
+        next_starts = [res.d_last for res in results]
 
         any_new = False
         for ci, res in enumerate(results):
@@ -273,27 +324,42 @@ def stage_batch(
             x_train.extend(design_features_batch(spec, res.traj))
             y_train.extend([res.phv] * len(res.traj))
 
+        def _refit_and_restart():
+            xs = np.stack(x_train)
+            ys = np.asarray(y_train, dtype=np.float64)
+            if x_init is not None and x_init.shape[0]:
+                xs = np.vstack([x_init, xs])
+                ys = np.concatenate([y_init, ys])
+            m = RegressionForest(seed=seed + it, **fk).fit(xs, ys)
+            new_starts = []
+            for res in results:
+                d_restart = _meta_greedy(
+                    spec, m, res.d_last, rng,
+                    n_swaps=n_swaps, n_link_moves=n_link_moves,
+                )
+                if d_restart.key() == res.d_last.key():
+                    new_starts.append(random_design(spec, rng))  # lines 10-11
+                else:
+                    new_starts.append(d_restart)                  # line 13
+            return m, new_starts
+
         if not any_new:
             converged = True
+            if checkpoint_restarts:
+                # The meta search costs no objective evaluations — still
+                # pick the restarts a continuing run would use, so a
+                # resuming coordinator round (repro.dist.sync) doesn't
+                # relaunch chains at their already-locally-optimal d_last
+                # and instantly re-converge on budget it could have spent
+                # exploring. Opt-in: callers that never read next_starts
+                # (the registry driver, the benchmarks) skip the refit.
+                _, next_starts = _refit_and_restart()
             break
         if max_evals is not None and ev.n_evals >= max_evals:
             break
 
-        fk = _merge_forest_kwargs(forest_kwargs, forest_backend)
-        model = RegressionForest(seed=seed + it, **fk).fit(
-            np.stack(x_train), np.asarray(y_train)
-        )
-
-        starts = []
-        for res in results:
-            d_restart = _meta_greedy(
-                spec, model, res.d_last, rng,
-                n_swaps=n_swaps, n_link_moves=n_link_moves,
-            )
-            if d_restart.key() == res.d_last.key():
-                starts.append(random_design(spec, rng))   # lines 10-11
-            else:
-                starts.append(d_restart)                   # line 13
+        model, starts = _refit_and_restart()
+        next_starts = list(starts)
 
     return StageBatchResult(
         global_set=s_global,
@@ -303,4 +369,7 @@ def stage_batch(
         n_starts=n_starts,
         n_evals=ev.n_evals,
         converged=converged,
+        x_train=(np.stack(x_train) if x_train else np.zeros((0, 0))),
+        y_train=np.asarray(y_train, dtype=np.float64),
+        next_starts=next_starts,
     )

@@ -1,0 +1,119 @@
+"""``repro.dist`` — distributed multi-start MOO-STAGE (DESIGN.md §8).
+
+Shards one global ``(NocProblem, Budget)`` across W workers
+(:mod:`~repro.dist.plan`), executes each shard as a pure JSON-boundary
+function (:mod:`~repro.dist.worker` — in-process, process pool, or
+per-JAX-device), merges the worker ``RunResult``s by worker-order-
+independent Pareto union (:mod:`~repro.dist.merge`), and optionally pools
+surrogate training rows between rounds (:mod:`~repro.dist.sync`).
+
+Entry point: :func:`run_dist` — registered in the optimizer registry as
+``"stage_dist"`` (``repro.noc run --optimizer stage_dist --workers K``).
+
+Fault tolerance: a worker that raises is recorded in the merged result's
+``extra["worker_failures"]`` and the coordinator returns the Pareto union
+of the survivors; only a run with *zero* surviving workers raises.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.noc.api import Budget, NocProblem, RunResult
+
+from .merge import merge_results, merged_pareto
+from .plan import Shard, plan_shards, round_seed, spawn_seeds, split_evenly
+from .sync import n_rounds, run_synced
+from .worker import EXECUTORS, check_executor, execute_shards, run_shard
+
+__all__ = [
+    "EXECUTORS", "Shard", "check_executor", "execute_shards",
+    "merge_results", "merged_pareto", "n_rounds", "plan_shards",
+    "round_seed", "run_dist", "run_shard", "run_synced", "spawn_seeds",
+    "split_evenly",
+]
+
+
+def _stage_config_json(cfg) -> dict:
+    """The worker-side ``StageBatchConfig`` overrides carried by a
+    :class:`~repro.noc.optimizers.StageDistConfig`."""
+    return {
+        "n_starts": cfg.n_starts, "iters_max": cfg.iters_max,
+        "n_swaps": cfg.n_swaps, "n_link_moves": cfg.n_link_moves,
+        "max_local_steps": cfg.max_local_steps,
+        "forest_kwargs": cfg.forest_kwargs,
+        "forest_backend": cfg.forest_backend,
+    }
+
+
+def run_dist(problem: NocProblem, budget: Budget, cfg) -> RunResult:
+    """Coordinate one distributed multi-start run; returns the merged
+    :class:`RunResult` (optimizer ``"stage_dist"``).
+
+    ``cfg`` is a :class:`repro.noc.optimizers.StageDistConfig` (read by
+    attribute — this module never imports the registry, the registry
+    imports us lazily). With ``sync_every == 0`` every worker runs its
+    whole shard independently (one ``stage_batch`` registry run each);
+    with ``sync_every > 0`` the run proceeds in surrogate-sync rounds
+    (see :mod:`repro.dist.sync`).
+
+    The W=1 ``serial`` run is the identity: one shard carrying the root
+    seed and the full budget through the same ``api.run`` path a direct
+    registry ``stage_batch`` call takes — byte-identical payload, pinned
+    by tests/test_dist.py.
+    """
+    from . import worker as _worker  # attribute lookup at call time so
+    #                                  monkeypatched run_shard is honored
+
+    check_executor(cfg.executor)
+    t0 = time.perf_counter()
+    shards = plan_shards(problem, budget, cfg.n_workers)
+
+    if cfg.sync_every > 0:
+        results, failure_rows = run_synced(problem, budget, cfg)
+    else:
+        stage_cfg = _stage_config_json(cfg)
+        tasks = [(s.problem.to_json(), s.budget.to_json(), s.budget.seed,
+                  stage_cfg, s.worker_id) for s in shards]
+        raw, failures = _worker.execute_shards(
+            _worker.run_shard, tasks, cfg.executor)
+        results = [RunResult.from_json(raw[i]) for i in sorted(raw)]
+        failure_rows = [[shards[i].worker_id, 0, msg]
+                        for i, msg in sorted(failures.items())]
+
+    if not results:
+        raise RuntimeError(
+            f"all {cfg.n_workers} workers failed: {failure_rows}")
+
+    if len(results) > 1:
+        # The merged set's PHV is recomputed under the problem's own mesh
+        # anchor — one coordinator-side evaluation, outside the (fully
+        # worker-consumed) search budget.
+        ctx = problem.context(problem.evaluator())
+        merged = merge_results(results, ctx=ctx)
+    else:
+        merged = merge_results(results)   # identity passthrough (W=1 pin)
+
+    extra = dict(merged.extra)
+    extra["n_workers"] = int(cfg.n_workers)
+    extra["executor"] = cfg.executor
+    extra["sync_every"] = int(cfg.sync_every)
+    extra["worker_seeds"] = [s.budget.seed for s in shards]
+    extra["worker_failures"] = failure_rows
+    exhausted = merged.exhausted
+    if budget.max_evals is not None and merged.n_evals >= budget.max_evals:
+        exhausted = True
+    if budget.max_calls is not None and merged.n_calls >= budget.max_calls:
+        exhausted = True
+
+    return dataclasses.replace(
+        merged,
+        optimizer="stage_dist",
+        problem=problem.to_json(),
+        budget=budget.to_json(),
+        config=dataclasses.asdict(cfg),
+        wall_s=time.perf_counter() - t0,
+        extra=extra,
+        exhausted=exhausted,
+    )

@@ -1,0 +1,237 @@
+"""Per-round surrogate + front sync across workers (DESIGN.md §8).
+
+``stage_batch`` shares one surrogate and one global front across its K
+in-process chains; this module generalizes both tricks across
+*processes*. The run is cut into rounds of ``sync_every`` STAGE
+iterations:
+
+1. every worker runs ``sync_every`` iterations of its chains
+   (:func:`repro.dist.worker.run_shard_round`) and checkpoints the
+   ``(X, y)`` surrogate training rows its trajectories produced plus the
+   designs its chains would restart from;
+2. the coordinator pools all workers' rows into one shared training set
+   and all workers' Pareto sets into one pooled front;
+3. the next round resumes every worker's chains from their checkpointed
+   starts with the pooled rows fitted into a warm surrogate
+   (``stage_batch(train_init=...)``) and the pooled front seeded as the
+   global set (``global_init=``) — each worker's meta-search is steered
+   by what *every* worker learned (DAgger across the fleet), and each
+   chain maximizes *marginal* PHV over the fleet's whole front instead
+   of re-finding another worker's tradeoffs.
+
+Budget accounting is cumulative and remainder-exact: the global
+``max_evals`` splits across workers, each worker's share splits across
+its first ``ceil(iters_max / sync_every)`` rounds, and round r may spend
+up to its cumulative slice minus what the worker actually spent — search
+drivers check budgets *before* a dispatch, so charging cumulatively
+bounds a worker at shard budget + one dispatch total instead of + one
+dispatch per round, and hands budget an early-converged round left to
+the rounds after it. Once the planned rounds are done, the coordinator
+keeps dispatching **extra rounds** (fresh ``sync_every``-iteration
+resumptions) while eval budget remains and the previous round still made
+search progress — the eval budget is the contract, iteration counts are
+per-round structure; without this, every worker that converges in the
+final planned round would strand its leftover budget. Each round runs on
+a fresh per-round evaluator (process workers cannot carry evaluator
+state between rounds), so each round's mesh-anchor evaluation is paid
+inside its slice, like any other evaluation.
+
+A worker that fails in round r is dropped from later rounds (its earlier
+rounds' results still merge); failures are reported to the coordinator
+as ``(worker_id, round, message)`` rows.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.local_search import ParetoSet
+from repro.noc.api import Budget, NocProblem, RunResult, design_to_json
+
+from .plan import plan_shards, round_seed, split_evenly
+
+#: history tags are ``worker_id * ROUND_TAG_STRIDE + round`` — unique per
+#: (worker, round) and worker-major when sorted. Also the hard cap on
+#: rounds (unreachable in practice: every dispatched round costs >= 1
+#: evaluation, so rounds are bounded by the eval budget long before it).
+ROUND_TAG_STRIDE = 100_000
+
+
+def n_rounds(iters_max: int, sync_every: int) -> int:
+    """Planned sync rounds: ceil(iters_max / sync_every). Extra
+    budget-draining rounds may follow (see the module docstring)."""
+    if sync_every < 1:
+        raise ValueError(f"sync_every must be >= 1, got {sync_every}")
+    return -(-iters_max // sync_every)
+
+
+def run_synced(problem: NocProblem, budget: Budget, cfg,
+               ) -> tuple[list[RunResult], list[list]]:
+    """Execute the round-based synced run; returns ``(results,
+    failures)`` where ``results`` are one RunResult per surviving
+    (worker, round) — history-tagged ``worker_id * ROUND_TAG_STRIDE +
+    round`` so the merge orders histories by worker then round — and
+    ``failures`` are ``[worker_id, round, message]`` rows.
+
+    ``cfg`` is the :class:`repro.noc.optimizers.StageDistConfig` (only
+    its fields are read; no import, so repro.dist never imports the
+    registry at module scope)."""
+    from . import worker as _worker
+
+    R = n_rounds(cfg.iters_max, cfg.sync_every)
+    shards = plan_shards(problem, budget, cfg.n_workers)
+    round_evals = {s.worker_id: split_evenly(s.budget.max_evals, R)
+                   for s in shards}
+    round_calls = {s.worker_id: split_evenly(s.budget.max_calls, R)
+                   for s in shards}
+    shard_budget = {s.worker_id: s.budget for s in shards}
+    spent_evals = {s.worker_id: 0 for s in shards}
+    spent_calls = {s.worker_id: 0 for s in shards}
+    stage_cfg = {
+        "n_starts": cfg.n_starts, "n_swaps": cfg.n_swaps,
+        "n_link_moves": cfg.n_link_moves,
+        "max_local_steps": cfg.max_local_steps,
+        "forest_kwargs": cfg.forest_kwargs,
+        "forest_backend": cfg.forest_backend,
+    }
+    problem_json = problem.to_json()
+
+    pooled_x: list[list[float]] = []
+    pooled_y: list[float] = []
+    # The pooled front: the Pareto union of everything any worker found
+    # so far, fed back as each next round's global_init.
+    pooled_front: dict | None = None
+    # Round-0 starts mirror stage_batch's chain diversification across
+    # the whole fleet: global chain j (worker i, chain k) starts from the
+    # mesh perturbed by 2·j random moves, drawn from the root seed.
+    # Without this every worker's chain 0 would re-explore the mesh basin
+    # W times over — exactly the duplicated work sharding must avoid.
+    from repro.core.problem import sample_neighbors
+
+    start_rng = np.random.default_rng(budget.seed)
+    base = problem.mesh()
+    starts_by_wid: dict[int, list[dict] | None] = {}
+    for s in shards:
+        chain_starts = []
+        for k in range(cfg.n_starts):
+            j = s.worker_id * cfg.n_starts + k
+            d = base
+            for _ in range(2 * j):
+                nb = sample_neighbors(problem.spec, d, start_rng, 1, 1)
+                if nb:
+                    d = nb[int(start_rng.integers(len(nb)))]
+            chain_starts.append(design_to_json(d))
+        starts_by_wid[s.worker_id] = chain_starts
+    alive = [s.worker_id for s in shards]
+    results: list[RunResult] = []
+    failures: list[list] = []
+
+    def _room(wid: int, r: int) -> tuple[int | None, int | None]:
+        """Cumulative remaining (evals, calls) for worker ``wid`` at
+        round ``r``; extra rounds (r >= R) draw on the full shard."""
+        def one(slices, spent, total):
+            if total is None:
+                return None
+            cum = total if r >= R else sum(slices[wid][:r + 1])
+            return max(0, cum - spent[wid])
+        return (one(round_evals, spent_evals, shard_budget[wid].max_evals),
+                one(round_calls, spent_calls, shard_budget[wid].max_calls))
+
+    def _one_round(r: int, pool) -> bool:
+        """Dispatch round ``r``; returns False when the run is done."""
+        nonlocal alive, pooled_front
+        planned = r < R
+        if not planned and budget.max_evals is None:
+            return False  # extra rounds only drain a finite eval budget
+        iters_r = (min(cfg.sync_every, cfg.iters_max - r * cfg.sync_every)
+                   if planned else cfg.sync_every)
+        tasks = []
+        dispatched = []
+        round_cfg = dict(stage_cfg, iters_max=iters_r)
+        for wid in alive:
+            evals_r, calls_r = _room(wid, r)
+            if evals_r == 0 or calls_r == 0:
+                continue  # budget fully consumed by earlier rounds
+            b = Budget(max_evals=evals_r, max_calls=calls_r,
+                       seed=round_seed(shard_budget[wid].seed, r))
+            starts = starts_by_wid[wid]
+            if not planned and pooled_front and pooled_front["designs"]:
+                # Extra rounds intensify: restart every chain from an
+                # elite of the pooled front (cycled across workers and
+                # rounds for coverage) instead of the meta/random restarts
+                # the worker checkpointed — late budget is better spent
+                # polishing the union front than opening new basins, which
+                # is exactly where the single-process driver's chains sit
+                # by this point of a run.
+                elite = pooled_front["designs"]
+                starts = [elite[(wid + k * cfg.n_workers + (r - R))
+                                % len(elite)]
+                          for k in range(cfg.n_starts)]
+            dispatched.append(wid)
+            tasks.append((
+                problem_json, b.to_json(), b.seed,
+                round_cfg,
+                wid * ROUND_TAG_STRIDE + r,        # unique history tag
+                starts,
+                pooled_x or None, pooled_y or None,
+                pooled_front,
+            ))
+        if not dispatched:
+            # Planned round with every alive worker's cumulative slice
+            # already overspent (one big dispatch can overshoot a small
+            # slice): skip forward — later rounds' larger cumulative
+            # targets reopen room. In extra rounds room IS the whole
+            # remaining shard, so nobody-dispatchable means truly done.
+            return planned
+        round_results, round_failures = _worker.execute_shards(
+            _worker.run_shard_round, tasks, cfg.executor, pool=pool)
+
+        dropped = []
+        for idx, msg in sorted(round_failures.items()):
+            failures.append([dispatched[idx], r, msg])
+            dropped.append(dispatched[idx])
+        # Pool in sorted (worker) order — the shared training set and
+        # front must be independent of worker completion order for the
+        # next round to be deterministic.
+        round_spent = 0
+        for idx in sorted(round_results):
+            wid = dispatched[idx]
+            payload = round_results[idx]
+            rr = RunResult.from_json(payload["result"])
+            spent_evals[wid] += int(rr.n_evals)
+            spent_calls[wid] += int(rr.n_calls)
+            round_spent += int(rr.n_evals)
+            results.append(rr)
+            pooled_x.extend(payload["x_train"])
+            pooled_y.extend(payload["y_train"])
+            if payload["next_starts"]:
+                starts_by_wid[wid] = payload["next_starts"]
+        alive = [w for w in alive if w not in dropped]
+        # Refresh the pooled front from every surviving result so far
+        # (workers echo the injected front back inside their global sets,
+        # so rebuilding from scratch is a pure union, no double counting).
+        front = ParetoSet.empty()
+        for rr in results:
+            front = front.merged_with(list(rr.designs),
+                                      np.asarray(rr.objs, dtype=np.float64),
+                                      rr.obj_idx)
+        pooled_front = {
+            "designs": [design_to_json(d) for d in front.designs],
+            "objs": np.asarray(front.objs, dtype=np.float64).tolist(),
+        }
+        # An unplanned round that spent only its mesh anchors made no
+        # search progress — further rounds would loop on anchors forever.
+        if not planned and round_spent <= len(dispatched):
+            return False
+        return True
+
+    # One pool for every round: spawn children pay their interpreter +
+    # JAX import once. (A hard child crash breaks the shared pool — the
+    # remaining rounds then fail fast and report, which is the honest
+    # outcome for a dead fleet.)
+    with _worker.shard_pool(cfg.executor, cfg.n_workers) as pool:
+        r = 0
+        while alive and r < ROUND_TAG_STRIDE and _one_round(r, pool):
+            r += 1
+
+    return results, failures

@@ -1,0 +1,252 @@
+"""Worker side of distributed multi-start MOO-STAGE + the executor matrix.
+
+:func:`run_shard` is a *pure function of JSON*: ``(problem_json,
+budget_json, seed) -> RunResult_json``. It rebuilds the problem, runs the
+registry ``stage_batch`` driver under the shard budget, and returns the
+serialized result — nothing about it depends on coordinator state, which
+is what lets the same function execute in-process, in a
+``ProcessPoolExecutor`` child, or pinned to a JAX device.
+
+Executor matrix (DESIGN.md §8):
+
+``serial``
+    In-order, in-process loop. The reproducibility anchor: the W=1 serial
+    run is pinned byte-identical to a registry ``stage_batch`` run, and
+    serial W>1 produces the same merged result as ``process`` (same
+    shards, same seeds — the executor only chooses *where* a shard runs).
+``process``
+    ``concurrent.futures.ProcessPoolExecutor`` with the **spawn** start
+    method — fork after JAX has initialized its runtime threads can
+    deadlock, so children pay a fresh interpreter + import instead.
+``jax``
+    One shard per JAX device, round-robin, each executed under
+    ``jax.default_device(dev)`` so its XLA dispatches land on its own
+    accelerator. On a single-device host this degrades to ``serial``
+    (documented, not hidden).
+
+Failures are collected, not raised: :func:`execute_shards` returns
+``(results, failures)`` and the coordinator merges the survivors,
+reporting the failures in ``RunResult.extra`` diagnostics.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import multiprocessing
+from concurrent.futures import ProcessPoolExecutor
+
+from repro.noc.api import Budget, NocProblem, RunResult
+
+EXECUTORS = ("serial", "process", "jax")
+
+
+def check_executor(executor: str) -> None:
+    if executor not in EXECUTORS:
+        raise ValueError(
+            f"executor must be one of {EXECUTORS}, got {executor!r}")
+
+
+# --------------------------------------------------------------------------
+# The pure worker functions (module-level: picklable by reference)
+# --------------------------------------------------------------------------
+def run_shard(problem_json: dict, budget_json: dict, seed: int,
+              config_json: dict | None = None, worker_id: int = 0) -> dict:
+    """Run one shard: registry ``stage_batch`` on the deserialized problem
+    under the shard budget, seeded with ``seed``. Returns the RunResult
+    JSON with the worker id tagged into ``extra`` (the merge orders
+    histories by it).
+
+    Calls :func:`repro.noc.api.run` exactly as a direct registry call
+    would (fresh evaluator, ctx built inside the budget guard) — a W=1
+    shard at the root seed is therefore byte-identical to ``run(problem,
+    "stage_batch", budget)``.
+    """
+    from repro.noc.api import run
+
+    problem = NocProblem.from_json(problem_json)
+    budget = dataclasses.replace(Budget.from_json(budget_json),
+                                 seed=int(seed))
+    res = run(problem, "stage_batch", budget=budget, config=config_json)
+    res.extra["worker_id"] = int(worker_id)
+    return res.to_json()
+
+
+def run_shard_round(problem_json: dict, budget_json: dict, seed: int,
+                    config_json: dict | None = None, worker_id: int = 0,
+                    starts_json: list[dict] | None = None,
+                    train_x: list | None = None,
+                    train_y: list | None = None,
+                    global_json: dict | None = None) -> dict:
+    """One surrogate-sync round of a shard (repro.dist.sync).
+
+    Like :func:`run_shard`, but resumes the worker's chains from
+    ``starts_json``, warm-starts the surrogate from the coordinator's
+    pooled ``(train_x, train_y)`` rows, and seeds the global
+    non-dominated set from the pooled front ``global_json`` (designs +
+    objective rows — they cost no evaluations, and make the chains
+    maximize marginal PHV over what the whole fleet already found).
+    Returns a composite dict::
+
+        {"result":      RunResult JSON (this round's search),
+         "x_train":     new surrogate rows this round produced,
+         "y_train":     their labels,
+         "next_starts": designs to resume the chains from next round}
+    """
+    import numpy as np
+
+    from repro.core.local_search import ParetoSet, SearchHistory
+    from repro.core.stage import StageBatchResult, stage_batch
+    from repro.noc.api import (BudgetedEvaluator, BudgetExhausted,
+                               design_from_json, design_to_json)
+    from repro.noc.optimizers import StageBatchConfig
+
+    problem = NocProblem.from_json(problem_json)
+    budget = dataclasses.replace(Budget.from_json(budget_json),
+                                 seed=int(seed))
+    cfg = StageBatchConfig(**(config_json or {}))
+    starts = ([design_from_json(s) for s in starts_json]
+              if starts_json else None)
+    train_init = None
+    if train_x is not None and len(train_x):
+        train_init = (np.asarray(train_x, dtype=np.float64),
+                      np.asarray(train_y, dtype=np.float64))
+    global_init = None
+    if global_json is not None and global_json.get("designs"):
+        global_init = ParetoSet(
+            [design_from_json(d) for d in global_json["designs"]],
+            np.asarray(global_json["objs"], dtype=np.float64))
+
+    # The guard mirrors api.run's uniform budget enforcement: max_evals
+    # duplicates stage_batch's native loop-top checks (same threshold —
+    # it can only fire when the round budget is pre-spent), but max_calls
+    # has no native check and must be enforced here. A guard trip forfeits
+    # the round's (unfinished) search — the coordinator keeps earlier
+    # rounds and flags the merged run exhausted.
+    ev = problem.evaluator()
+    guarded = BudgetedEvaluator(ev, budget)
+    res: StageBatchResult | None = None
+    ctx = history = None
+    try:
+        ctx = problem.context(guarded)  # mesh anchor: 1 guarded eval
+        history = SearchHistory(ev, ctx)
+        res = stage_batch(
+            problem.spec, problem.traffic_matrix(), n_starts=cfg.n_starts,
+            seed=budget.seed, case=problem.case, iters_max=cfg.iters_max,
+            n_swaps=cfg.n_swaps, n_link_moves=cfg.n_link_moves,
+            max_local_steps=cfg.max_local_steps,
+            forest_kwargs=cfg.forest_kwargs,
+            forest_backend=(cfg.forest_backend
+                            if cfg.forest_backend is not None
+                            else problem.forest_backend),
+            max_evals=budget.max_evals, ev=guarded, ctx=ctx, history=history,
+            starts=starts, train_init=train_init, global_init=global_init,
+            checkpoint_restarts=True,
+        )
+    except BudgetExhausted:
+        pass
+    exhausted = res is None
+    if budget.max_evals is not None and ev.n_evals >= budget.max_evals:
+        exhausted = True
+    if budget.max_calls is not None and ev.n_calls >= budget.max_calls:
+        exhausted = True
+    if res is None:
+        # Guard tripped: the round's unfinished search is forfeited, but
+        # any partial history records (real evaluations) are kept.
+        res = StageBatchResult(
+            global_set=ParetoSet.empty(), history=history, eval_errors=[],
+            n_local_searches=0, n_starts=cfg.n_starts, n_evals=ev.n_evals,
+            converged=False)
+    rr = RunResult(
+        optimizer="stage_batch",
+        problem=problem.to_json(),
+        budget=budget.to_json(),
+        config=dataclasses.asdict(cfg),
+        obj_idx=tuple(ctx.obj_idx) if ctx is not None else problem.obj_idx,
+        designs=list(res.global_set.designs),
+        objs=np.asarray(res.global_set.objs, dtype=np.float64),
+        n_evals=ev.n_evals,
+        n_calls=ev.n_calls,
+        wall_s=0.0,
+        history=(history.as_array() if history is not None
+                 else np.zeros((0, 4))),
+        extra={"worker_id": int(worker_id), "converged": res.converged,
+               "n_local_searches": res.n_local_searches,
+               "phv": (ctx.phv(res.global_set.objs)
+                       if ctx is not None else 0.0)},
+        exhausted=exhausted,
+    )
+    return {
+        "result": rr.to_json(),
+        "x_train": np.asarray(res.x_train, dtype=np.float64).tolist(),
+        "y_train": np.asarray(res.y_train, dtype=np.float64).tolist(),
+        "next_starts": [design_to_json(d) for d in res.next_starts],
+    }
+
+
+# --------------------------------------------------------------------------
+# Executors
+# --------------------------------------------------------------------------
+@contextlib.contextmanager
+def shard_pool(executor: str, n_workers: int):
+    """Reusable process pool for multi-round dispatch (repro.dist.sync):
+    spawn-started children pay interpreter + JAX import once, not once
+    per round. Yields None for the in-process executors."""
+    check_executor(executor)
+    if executor != "process":
+        yield None
+        return
+    mp_ctx = multiprocessing.get_context("spawn")
+    with ProcessPoolExecutor(max_workers=max(1, n_workers),
+                             mp_context=mp_ctx) as pool:
+        yield pool
+
+
+def execute_shards(fn, arg_tuples: list[tuple], executor: str = "serial",
+                   pool=None) -> tuple[dict[int, dict], dict[int, str]]:
+    """Run ``fn(*args)`` for every entry of ``arg_tuples`` under the
+    chosen executor. Entry ``i`` is shard ``i``; returns ``(results,
+    failures)`` keyed by shard index — a raising shard lands in
+    ``failures`` as ``"ExcType: message"`` instead of aborting the rest
+    (fault isolation; the coordinator merges the survivors).
+
+    ``pool`` (from :func:`shard_pool`) reuses one process pool across
+    calls; without it the ``process`` executor builds a one-shot pool.
+    """
+    check_executor(executor)
+    results: dict[int, dict] = {}
+    failures: dict[int, str] = {}
+
+    if executor == "process":
+        with contextlib.ExitStack() as stack:
+            if pool is None:
+                pool = stack.enter_context(
+                    shard_pool(executor, len(arg_tuples)))
+            futures = {i: pool.submit(fn, *args)
+                       for i, args in enumerate(arg_tuples)}
+            for i, fut in futures.items():
+                try:
+                    results[i] = fut.result()
+                except Exception as exc:  # noqa: BLE001 — fault isolation
+                    failures[i] = f"{type(exc).__name__}: {exc}"
+        return results, failures
+
+    if executor == "jax":
+        import jax
+
+        devices = jax.devices()
+        for i, args in enumerate(arg_tuples):
+            dev = devices[i % len(devices)]
+            try:
+                with jax.default_device(dev):
+                    results[i] = fn(*args)
+            except Exception as exc:  # noqa: BLE001
+                failures[i] = f"{type(exc).__name__}: {exc}"
+        return results, failures
+
+    for i, args in enumerate(arg_tuples):  # serial
+        try:
+            results[i] = fn(*args)
+        except Exception as exc:  # noqa: BLE001
+            failures[i] = f"{type(exc).__name__}: {exc}"
+    return results, failures

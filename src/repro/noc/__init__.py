@@ -17,8 +17,8 @@ from .api import (Budget, BudgetedEvaluator, BudgetExhausted, NocProblem,
                   named_spec, run)
 from .optimizers import (OPTIMIZERS, AmosaConfig, LocalConfig, Nsga2Config,
                          OptimizerEntry, PcbbConfig, StageBatchConfig,
-                         StageConfig, get_optimizer, make_config,
-                         optimizer_names, register)
+                         StageConfig, StageDistConfig, get_optimizer,
+                         make_config, optimizer_names, register)
 # Re-exported so the agnostic study is reachable from the unified surface
 # (repro.core.agnostic imports repro.noc lazily inside functions — no cycle).
 from repro.core.agnostic import (OptimizeBudget, optimize_for_traffic,
@@ -28,7 +28,8 @@ __all__ = [
     "AmosaConfig", "Budget", "BudgetExhausted", "BudgetedEvaluator",
     "LocalConfig", "NocProblem", "Nsga2Config", "OPTIMIZERS",
     "OptimizeBudget", "OptimizerEntry", "PcbbConfig", "RunRecorder",
-    "RunResult", "StageBatchConfig", "StageConfig", "design_from_json",
+    "RunResult", "StageBatchConfig", "StageConfig", "StageDistConfig",
+    "design_from_json",
     "design_to_json", "get_optimizer", "make_config", "named_spec",
     "optimize_for_traffic", "optimizer_names", "register",
     "run", "run_agnostic_study", "summarize", "thermal_study",

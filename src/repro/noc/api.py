@@ -476,6 +476,22 @@ def run(
     budget = budget or Budget()
     cfg = make_config(entry, config)
 
+    if entry.owns_result:
+        # Coordinator drivers (e.g. "stage_dist") run their evaluations on
+        # evaluators this function cannot see — other processes or
+        # devices — so they own accounting, history, and budget
+        # enforcement and return a complete RunResult. The single-process
+        # conveniences below cannot reach across that boundary.
+        if ev is not None or ctx is not None:
+            raise ValueError(
+                f"optimizer {entry.name!r} owns its RunResult; ev=/ctx= "
+                "injection is not supported (workers build their own)")
+        if callback is not None or track_phv:
+            raise ValueError(
+                f"optimizer {entry.name!r} owns its RunResult; callback=/"
+                "track_phv= are not supported across worker boundaries")
+        return entry.run_fn(problem, budget, cfg, None, None, None)
+
     base_ev = ev if ev is not None else problem.evaluator()
     n_evals0, n_calls0 = base_ev.n_evals, base_ev.n_calls
     guarded = BudgetedEvaluator(base_ev, budget)

@@ -102,8 +102,15 @@ def cmd_run(args) -> int:
     problem = _build_problem(args)
     budget = Budget(max_evals=args.max_evals, max_calls=args.max_calls,
                     seed=args.seed)
+    overrides = _parse_overrides(args.set)
+    if args.workers is not None:
+        if args.optimizer != "stage_dist":
+            raise SystemExit(
+                f"--workers only applies to --optimizer stage_dist "
+                f"(got {args.optimizer!r})")
+        overrides["n_workers"] = args.workers
     res = run(problem, args.optimizer, budget=budget,
-              config=_parse_overrides(args.set) or None)
+              config=overrides or None)
     if not args.quiet:
         print(_summary_line(res))
         for d_obj in np.asarray(res.objs):
@@ -182,6 +189,10 @@ def main(argv: list[str] | None = None) -> int:
                         help=f"one of {', '.join(optimizer_names())}")
     ap_run.add_argument("--set", action="append", default=[],
                         metavar="KEY=VALUE", help="optimizer config override")
+    ap_run.add_argument("--workers", type=int, default=None,
+                        help="stage_dist worker count (shorthand for "
+                             "--set n_workers=K; shards the budget, merges "
+                             "by Pareto union)")
     ap_run.add_argument("--out", default=None, help="save RunResult JSON")
     ap_run.add_argument("--smoke", action="store_true",
                         help="fixed tiny self-check (CI tier-1)")

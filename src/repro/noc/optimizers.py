@@ -79,6 +79,43 @@ class StageBatchConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class StageDistConfig:
+    """Distributed multi-start MOO-STAGE — see :func:`repro.dist.run_dist`.
+
+    ``n_workers`` shards the global budget (remainder-exact; per-worker
+    seeds spawned from the root seed); ``executor`` picks where shards
+    run (``"serial"`` in-process, ``"process"`` spawn-based
+    ``ProcessPoolExecutor``, ``"jax"`` one shard per JAX device);
+    ``sync_every`` > 0 pools surrogate training rows across workers every
+    that many STAGE iterations (0 = fully independent workers). The
+    remaining knobs configure each worker's ``stage_batch`` run
+    (``n_starts`` chains *per worker*, default 1 — W workers × 1 chain is
+    the like-for-like peer of ``stage_batch(n_starts=W)``)."""
+
+    n_workers: int = 4
+    executor: str = "serial"
+    sync_every: int = 0
+    n_starts: int = 1
+    iters_max: int = 12
+    n_swaps: int = 24
+    n_link_moves: int = 24
+    max_local_steps: int = 10_000
+    forest_kwargs: dict | None = None
+    forest_backend: str | None = None
+
+    def __post_init__(self):
+        from repro.dist.worker import check_executor
+
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {self.n_workers}")
+        if self.sync_every < 0:
+            raise ValueError(
+                f"sync_every must be >= 0, got {self.sync_every}")
+        check_executor(self.executor)
+        check_forest_backend(self.forest_backend, allow_none=True)
+
+
+@dataclasses.dataclass(frozen=True)
 class AmosaConfig:
     """AMOSA baseline — see :func:`repro.core.amosa.amosa`."""
 
@@ -138,19 +175,25 @@ class OptimizerEntry:
     #: the driver enforces Budget.max_evals itself (stops at the guard's
     #: exact threshold) — lets run() skip the fallback-Pareto upkeep.
     native_max_evals: bool = True
+    #: the adapter returns a complete RunResult instead of (ParetoSet,
+    #: extra) — for coordinators (e.g. "stage_dist") whose evaluations
+    #: happen on evaluators run() cannot see (other processes/devices), so
+    #: the driver must own accounting, history, and budget enforcement.
+    owns_result: bool = False
 
 
 OPTIMIZERS: dict[str, OptimizerEntry] = {}
 
 
-def register(name: str, config_cls: type, *, native_max_evals: bool = True):
+def register(name: str, config_cls: type, *, native_max_evals: bool = True,
+             owns_result: bool = False):
     """Decorator: add an adapter to the registry under ``name``."""
 
     def deco(fn):
         if name in OPTIMIZERS:
             raise ValueError(f"optimizer {name!r} already registered")
         OPTIMIZERS[name] = OptimizerEntry(name, config_cls, fn,
-                                          native_max_evals)
+                                          native_max_evals, owns_result)
         return fn
 
     return deco
@@ -221,6 +264,17 @@ def _run_stage_batch(problem: NocProblem, budget: Budget,
         "n_starts": res.n_starts,
         "eval_errors": [[it, float(e)] for it, e in res.eval_errors],
     }
+
+
+@register("stage_dist", StageDistConfig, owns_result=True)
+def _run_stage_dist(problem: NocProblem, budget: Budget,
+                    cfg: StageDistConfig, ev, ctx, history):
+    # Lazy import: repro.dist imports repro.noc.api at module scope; a
+    # top-level import here would re-enter repro.dist mid-initialization
+    # whenever repro.dist is imported first.
+    from repro.dist import run_dist
+
+    return run_dist(problem, budget, cfg)
 
 
 @register("amosa", AmosaConfig)

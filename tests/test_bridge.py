@@ -3,8 +3,12 @@
 import numpy as np
 import pytest
 
+# repro.dist exists now (distributed multi-start MOO-STAGE, PR 5) but the
+# pod-level bridge modules these tests exercise are still unbuilt — skip on
+# the specific submodule, not the package (tests/test_dist.py audits this).
 pytest.importorskip(
-    "repro.dist", reason="repro.dist (pod-level bridge) not built yet")
+    "repro.dist.mesh_layout",
+    reason="repro.dist.mesh_layout (pod-level bridge) not built yet")
 
 from repro.dist.autoshard import Genome
 from repro.dist.mesh_layout import (LayoutEvaluator, Torus,

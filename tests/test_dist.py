@@ -1,0 +1,461 @@
+"""Distributed multi-start MOO-STAGE (repro.dist): the merge/determinism/
+fault-injection suite.
+
+Pins the DESIGN.md §8 contract:
+
+* shard planning is remainder-exact (Σ worker budgets == global budget)
+  and W=1 is the identity plan;
+* the Pareto-union merge is associative, commutative, idempotent, and
+  independent of worker arrival order (bit-identical merged objectives
+  under any permutation — process pools complete out of order);
+* merged accounting is the sum of shard accounting and the merged
+  RunResult JSON round-trips exactly;
+* ``stage_dist(executor="serial", n_workers=1)`` is byte-identical to a
+  registry ``stage_batch`` run (wall-clock zeroed);
+* a raising worker is reported in diagnostics and the survivors' union
+  is returned; a budget-tripped worker merges as ``exhausted=True``;
+* at equal global budget, ``stage_dist(W=4, process)`` reaches PHV >=
+  single-process ``stage_batch(n_starts=4)`` on spec_tiny seeds 0/1/2.
+"""
+
+import itertools
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import dominates, spec_tiny
+from repro.dist import (merge_results, n_rounds, plan_shards, spawn_seeds,
+                        split_evenly)
+from repro.dist import worker as dist_worker
+from repro.noc import Budget, NocProblem, RunResult, run
+
+#: few-second stage_batch knobs shared by the whole suite
+SMALL = dict(iters_max=2, n_swaps=4, n_link_moves=4, max_local_steps=5)
+
+
+@pytest.fixture(scope="module")
+def tiny_problem() -> NocProblem:
+    return NocProblem(spec=spec_tiny(), traffic="BFS", case="case3")
+
+
+@pytest.fixture(scope="module")
+def worker_results(tiny_problem) -> list[RunResult]:
+    """Three REAL worker RunResults — one per shard of a W=3 plan —
+    exactly what the coordinator's merge consumes."""
+    shards = plan_shards(tiny_problem, Budget(max_evals=360, seed=7), 3)
+    out = []
+    for s in shards:
+        raw = dist_worker.run_shard(s.problem.to_json(), s.budget.to_json(),
+                                    s.budget.seed, dict(SMALL, n_starts=1),
+                                    worker_id=s.worker_id)
+        out.append(RunResult.from_json(raw))
+    return out
+
+
+def _payload(res: RunResult) -> str:
+    """Canonical payload JSON: wall-clock zeroed; header fields that
+    necessarily name the driver (optimizer/config/extra) excluded."""
+    j = res.to_json()
+    j["history"] = [[0.0] + row[1:] for row in j["history"]]
+    keep = ("problem", "budget", "obj_idx", "designs", "objs", "history",
+            "n_evals", "n_calls", "exhausted")
+    return json.dumps({k: j[k] for k in keep}, sort_keys=True)
+
+
+def _pareto_sig(res: RunResult) -> tuple:
+    """(design keys, objective bytes) — the merge-invariant Pareto part."""
+    return (tuple(d.key() for d in res.designs),
+            np.asarray(res.objs, dtype=np.float64).tobytes())
+
+
+# ---------------------------------------------------------------------------
+# Shard planning
+# ---------------------------------------------------------------------------
+def test_split_evenly_remainder_exact():
+    for total, k in ((10, 3), (7, 7), (5, 8), (0, 4), (1000, 7)):
+        parts = split_evenly(total, k)
+        assert sum(parts) == total and len(parts) == k
+        assert max(parts) - min(parts) <= 1
+    assert split_evenly(None, 3) == [None, None, None]
+    with pytest.raises(ValueError, match="k must be"):
+        split_evenly(10, 0)
+    with pytest.raises(ValueError, match="total must be"):
+        split_evenly(-1, 2)
+
+
+def test_spawn_seeds_identity_and_determinism():
+    # W=1 passes the root seed through — the serial-equivalence anchor.
+    assert spawn_seeds(3, 1) == [3]
+    s1 = spawn_seeds(3, 4)
+    assert s1 == spawn_seeds(3, 4)            # deterministic in the root
+    assert len(set(s1)) == 4                  # distinct streams
+    assert s1 != spawn_seeds(4, 4)            # root seed matters
+    with pytest.raises(ValueError, match="n_workers"):
+        spawn_seeds(0, 0)
+
+
+def test_plan_shards_budget_sums(tiny_problem):
+    for w, me, mc in ((4, 1000, None), (3, 100, 17), (5, 3, 3)):
+        shards = plan_shards(tiny_problem, Budget(max_evals=me, max_calls=mc,
+                                                  seed=5), w)
+        assert [s.worker_id for s in shards] == list(range(w))
+        assert sum(s.budget.max_evals for s in shards) == me
+        if mc is None:
+            assert all(s.budget.max_calls is None for s in shards)
+        else:
+            assert sum(s.budget.max_calls for s in shards) == mc
+        assert [s.budget.seed for s in shards] == spawn_seeds(5, w)
+        assert all(s.problem is tiny_problem for s in shards)
+    ident = plan_shards(tiny_problem, Budget(max_evals=50, seed=9), 1)[0]
+    assert ident.budget == Budget(max_evals=50, seed=9)
+
+
+def test_n_rounds():
+    assert n_rounds(12, 5) == 3 and n_rounds(12, 12) == 1
+    assert n_rounds(12, 100) == 1
+    with pytest.raises(ValueError, match="sync_every"):
+        n_rounds(12, 0)
+
+
+# ---------------------------------------------------------------------------
+# Merge semantics
+# ---------------------------------------------------------------------------
+def test_merge_commutative_bit_identical_under_any_order(worker_results):
+    """Acceptance: merged Pareto objectives (and designs, history, and
+    accounting) are bit-identical under ANY permutation of worker result
+    arrival order."""
+    ref = merge_results(list(worker_results))
+    ref_payload = _payload(ref)
+    ref_spans = ref.extra["history_spans"]
+    for perm in itertools.permutations(worker_results):
+        m = merge_results(list(perm))
+        assert _pareto_sig(m) == _pareto_sig(ref)
+        assert _payload(m) == ref_payload
+        assert m.extra["history_spans"] == ref_spans
+
+
+def test_merge_associative(worker_results):
+    a, b, c = worker_results
+    flat = merge_results([a, b, c])
+    left = merge_results([merge_results([a, b]), c])
+    right = merge_results([a, merge_results([b, c])])
+    assert _payload(left) == _payload(flat) == _payload(right)
+    assert _pareto_sig(left) == _pareto_sig(flat) == _pareto_sig(right)
+    # Nested merges flatten their history spans to the same tagging.
+    assert (left.extra["history_spans"] == flat.extra["history_spans"]
+            == right.extra["history_spans"])
+
+
+def test_merge_idempotent(worker_results):
+    a = worker_results[0]
+    # Singleton merge is the identity (payload AND headers).
+    solo = merge_results([a])
+    assert _payload(solo) == _payload(a)
+    assert solo.extra == a.extra
+    # Merging a result with a copy of itself (re-tagged: ids must be
+    # unique) adds nothing to the Pareto union.
+    twin = RunResult.from_json(a.to_json())
+    twin.extra["worker_id"] = 99
+    both = merge_results([a, twin])
+    assert _pareto_sig(both) == _pareto_sig(merge_results([a]))
+    # A merge of a merge changes nothing.
+    m = merge_results(list(worker_results))
+    assert _payload(merge_results([m])) == _payload(m)
+
+
+def test_merge_accounting_is_sum_of_shards(worker_results):
+    """Satellite: merged accounting equals the sum of shard accounting."""
+    m = merge_results(list(worker_results))
+    assert m.n_evals == sum(r.n_evals for r in worker_results)
+    assert m.n_calls == sum(r.n_calls for r in worker_results)
+    assert m.wall_s == max(r.wall_s for r in worker_results)
+    assert m.exhausted == any(r.exhausted for r in worker_results)
+    total_rows = sum(np.asarray(r.history).shape[0] for r in worker_results)
+    assert np.asarray(m.history).shape == (total_rows, 4)
+    # Spans partition the merged history, in worker-id order, one per input.
+    spans = m.extra["history_spans"]
+    assert [w for w, _, _ in spans] == [0, 1, 2]
+    assert spans[0][1] == 0 and spans[-1][2] == total_rows
+    for (w1, a1, b1), (w2, a2, b2) in zip(spans, spans[1:]):
+        assert b1 == a2
+    for (w, a, b), r in zip(spans, worker_results):
+        np.testing.assert_array_equal(m.history[a:b], r.history)
+
+
+def test_merge_result_is_mutually_nondominated(worker_results):
+    m = merge_results(list(worker_results))
+    assert len(m.designs) >= 1
+    sub = np.asarray(m.objs)[:, list(m.obj_idx)]
+    for i in range(sub.shape[0]):
+        for j in range(sub.shape[0]):
+            if i != j:
+                assert not dominates(sub[i], sub[j])
+    # Every merged design came from some worker and every worker row is
+    # dominated-or-present (union semantics: nothing invented, nothing
+    # non-dominated lost).
+    all_keys = {d.key() for r in worker_results for d in r.designs}
+    assert {d.key() for d in m.designs} <= all_keys
+
+
+def test_merged_runresult_json_roundtrip_exact(worker_results, tmp_path):
+    """Satellite: merged RunResult JSON round-trips exactly."""
+    m = merge_results(list(worker_results))
+    path = tmp_path / "merged.json"
+    m.save(path)
+    back = RunResult.load(path)
+    assert _payload(back) == _payload(m)
+    assert np.array_equal(np.asarray(back.objs), np.asarray(m.objs))
+    assert [d.key() for d in back.designs] == [d.key() for d in m.designs]
+    assert np.array_equal(back.history, m.history, equal_nan=True)
+    assert back.extra["history_spans"] == m.extra["history_spans"]
+    # And a second round trip is stable byte-for-byte.
+    assert json.dumps(back.to_json()) == json.dumps(m.to_json())
+
+
+def test_merge_input_validation(worker_results):
+    a, b = worker_results[:2]
+    with pytest.raises(ValueError, match="at least one"):
+        merge_results([])
+    bad = RunResult.from_json(a.to_json())
+    bad.obj_idx = (0, 1)
+    with pytest.raises(ValueError, match="objective subsets"):
+        merge_results([b, bad])
+    dup = RunResult.from_json(b.to_json())  # same worker_id as b
+    with pytest.raises(ValueError, match="unique"):
+        merge_results([b, dup])
+
+
+# ---------------------------------------------------------------------------
+# The distributed driver
+# ---------------------------------------------------------------------------
+def test_stage_dist_serial_w1_byte_identical_to_stage_batch(tiny_problem):
+    """Satellite: the W=1 serial run reproduces a registry ``stage_batch``
+    run byte-for-byte — problem, budget, designs, objectives, history
+    (wall-clock zeroed), accounting, and exhaustion all identical; only
+    the driver-naming headers (optimizer/config/extra) differ."""
+    budget = Budget(max_evals=150, seed=3)
+    ref = run(tiny_problem, "stage_batch", budget=budget,
+              config=dict(SMALL, n_starts=1))
+    dist = run(tiny_problem, "stage_dist", budget=budget,
+               config=dict(SMALL, n_workers=1, executor="serial", n_starts=1))
+    assert dist.optimizer == "stage_dist"
+    assert _payload(dist) == _payload(ref)
+    assert dist.phv() == ref.phv()
+    # Same bytes again on a rerun: the dist driver inherits the registry's
+    # seeded-determinism pin.
+    dist2 = run(tiny_problem, "stage_dist", budget=budget,
+                config=dict(SMALL, n_workers=1, executor="serial",
+                            n_starts=1))
+    assert _payload(dist2) == _payload(dist)
+
+
+def test_stage_dist_executors_agree(tiny_problem):
+    """The executor chooses WHERE shards run, never the result: serial and
+    per-jax-device runs of the same plan produce identical payloads."""
+    budget = Budget(max_evals=240, seed=0)
+    cfg = dict(SMALL, n_workers=3, executor="serial")
+    ser = run(tiny_problem, "stage_dist", budget=budget, config=cfg)
+    jx = run(tiny_problem, "stage_dist", budget=budget,
+             config=dict(cfg, executor="jax"))
+    assert _payload(jx) == _payload(ser)
+    assert _pareto_sig(jx) == _pareto_sig(ser)
+    assert ser.extra["worker_seeds"] == spawn_seeds(0, 3)
+
+
+def test_stage_dist_worker_failure_is_survivable(tiny_problem, monkeypatch):
+    """Satellite: a raising worker lands in diagnostics and the merged
+    Pareto set of the SURVIVING workers comes back instead of a crash."""
+    real = dist_worker.run_shard
+
+    def flaky(problem_json, budget_json, seed, config_json=None,
+              worker_id=0):
+        if worker_id == 1:
+            raise RuntimeError("simulated worker crash")
+        return real(problem_json, budget_json, seed, config_json,
+                    worker_id=worker_id)
+
+    monkeypatch.setattr(dist_worker, "run_shard", flaky)
+    res = run(tiny_problem, "stage_dist", budget=Budget(max_evals=360, seed=7),
+              config=dict(SMALL, n_workers=3, executor="serial"))
+    fails = res.extra["worker_failures"]
+    assert fails == [[1, 0, "RuntimeError: simulated worker crash"]]
+    assert len(res.designs) >= 1 and np.isfinite(res.phv())
+    # Survivors only: both surviving workers' spans present, none for 1.
+    assert [w for w, _, _ in res.extra["history_spans"]] == [0, 2]
+    # Accounting covers exactly the survivors.
+    assert res.n_evals == sum(w["n_evals"] for w in res.extra["workers"])
+
+    def always_fail(*a, **k):
+        raise RuntimeError("boom")
+
+    monkeypatch.setattr(dist_worker, "run_shard", always_fail)
+    with pytest.raises(RuntimeError, match="all 2 workers failed"):
+        run(tiny_problem, "stage_dist", budget=Budget(max_evals=100),
+            config=dict(SMALL, n_workers=2, executor="serial"))
+
+
+def test_stage_dist_budget_trip_merges_exhausted(tiny_problem):
+    """Satellite: a worker that hits its shard budget (the native check or
+    the BudgetedEvaluator guard on max_calls) merges as exhausted=True."""
+    res = run(tiny_problem, "stage_dist", budget=Budget(max_evals=60, seed=0),
+              config=dict(SMALL, n_workers=2, executor="serial"))
+    assert res.exhausted
+    assert all(w["exhausted"] for w in res.extra["workers"])
+    # max_calls trips the BudgetedEvaluator guard mid-driver; the worker
+    # returns its best-so-far set and the merge carries the flag.
+    res2 = run(tiny_problem, "stage_dist",
+               budget=Budget(max_calls=6, seed=0),
+               config=dict(SMALL, n_workers=2, executor="serial"))
+    assert res2.exhausted and len(res2.designs) >= 1
+    # Synced rounds enforce max_calls too (the guard wraps each round's
+    # evaluator); a tripped round is forfeited but the run completes.
+    res3 = run(tiny_problem, "stage_dist",
+               budget=Budget(max_calls=8, seed=0),
+               config=dict(SMALL, n_workers=2, executor="serial",
+                           sync_every=1))
+    assert res3.exhausted
+    assert res3.n_calls <= 8 + 2  # cap + one in-flight dispatch per worker
+
+
+def test_stage_dist_sync_deterministic_and_budgeted(tiny_problem):
+    """Surrogate-sync rounds: deterministic for a fixed seed, budget held
+    to the global cap + one dispatch per worker, histories tagged with
+    unique per-(worker, round) ids."""
+    budget = Budget(max_evals=300, seed=1)
+    cfg = dict(SMALL, n_workers=2, executor="serial", sync_every=1,
+               iters_max=3)
+    r1 = run(tiny_problem, "stage_dist", budget=budget, config=cfg)
+    r2 = run(tiny_problem, "stage_dist", budget=budget, config=cfg)
+    assert _payload(r1) == _payload(r2)
+    assert r1.extra["history_spans"] == r2.extra["history_spans"]
+    # One neighborhood is <= 2*(n_swaps + n_link_moves) candidates; each
+    # worker's final spending round may overshoot by one such dispatch
+    # plus its mesh anchor and starts evaluation (the cumulative round
+    # budgeting absorbs every earlier round's overshoot).
+    per_worker = 2 * (SMALL["n_swaps"] + SMALL["n_link_moves"]) + 2
+    assert r1.n_evals <= 300 + 2 * per_worker
+    wids = [w for w, _, _ in r1.extra["history_spans"]]
+    assert len(wids) == len(set(wids))
+    sub = np.asarray(r1.objs)[:, list(r1.obj_idx)]
+    for i in range(sub.shape[0]):
+        for j in range(sub.shape[0]):
+            if i != j:
+                assert not dominates(sub[i], sub[j])
+
+
+def test_stage_dist_sync_worker_failure_drops_later_rounds(
+        tiny_problem, monkeypatch):
+    """A worker failing in round r is reported and excluded from rounds
+    r+1.. while its earlier rounds still merge."""
+    real = dist_worker.run_shard_round
+
+    calls = []
+
+    def flaky(problem_json, budget_json, seed, config_json=None,
+              worker_id=0, starts_json=None, train_x=None, train_y=None,
+              global_json=None):
+        from repro.dist.sync import ROUND_TAG_STRIDE
+
+        wid, rnd = divmod(worker_id, ROUND_TAG_STRIDE)
+        calls.append((wid, rnd))
+        if wid == 1 and rnd == 1:
+            raise RuntimeError("dies in round 1")
+        return real(problem_json, budget_json, seed, config_json,
+                    worker_id=worker_id, starts_json=starts_json,
+                    train_x=train_x, train_y=train_y,
+                    global_json=global_json)
+
+    monkeypatch.setattr(dist_worker, "run_shard_round", flaky)
+    res = run(tiny_problem, "stage_dist", budget=Budget(max_evals=300, seed=2),
+              config=dict(SMALL, n_workers=2, executor="serial",
+                          sync_every=1, iters_max=3))
+    assert res.extra["worker_failures"] == [[1, 1, "RuntimeError: dies in round 1"]]
+    assert (1, 2) not in calls            # dropped from the last round
+    assert (0, 2) in calls                # survivor kept going
+    assert len(res.designs) >= 1
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cli_stage_dist_workers_flag(capsys, tmp_path):
+    from repro.noc import cli
+
+    out = tmp_path / "dist.json"
+    rc = cli.main([
+        "run", "--spec", "tiny", "--optimizer", "stage_dist",
+        "--workers", "2", "--max-evals", "120", "--seed", "0",
+        "--set", "iters_max=1", "--set", "n_swaps=3",
+        "--set", "n_link_moves=3", "--set", "max_local_steps=3",
+        "--out", str(out), "--quiet"])
+    assert rc == 0
+    saved = RunResult.load(out)
+    assert saved.optimizer == "stage_dist"
+    assert saved.config["n_workers"] == 2
+    with pytest.raises(SystemExit, match="only applies"):
+        cli.main(["run", "--optimizer", "stage", "--workers", "2"])
+
+
+# ---------------------------------------------------------------------------
+# Package / skip audit (PR 1 importorskip guards)
+# ---------------------------------------------------------------------------
+def test_dist_exists_and_legacy_skips_are_retargeted():
+    """Satellite: ``repro.dist`` now exists, so the PR-1
+    ``importorskip("repro.dist")`` guards in test_bridge/test_substrate
+    would no longer skip — they must target the still-unbuilt submodules
+    instead, and those submodules must actually be absent (if one lands,
+    this test forces the corresponding suite to un-skip)."""
+    import importlib.util
+
+    import repro.dist  # must import cleanly — the package is real now
+
+    assert callable(repro.dist.run_dist)
+    here = os.path.dirname(os.path.abspath(__file__))
+    for fname, submodule in (("test_bridge.py", "repro.dist.mesh_layout"),
+                             ("test_substrate.py", "repro.dist.sharding"),
+                             ("test_dryrun.py", "repro.dist.sharding")):
+        src = open(os.path.join(here, fname)).read()
+        assert f'"{submodule}"' in src, (
+            f"{fname} must importorskip {submodule}, not the repro.dist "
+            "package (which now imports fine)")
+        # No guard may target the bare package — that skip silently became
+        # a no-op the moment repro.dist landed.
+        assert '"repro.dist"' not in src, fname
+        # The retarget is honest: the submodule really is absent, so the
+        # tier-1 skip count stays exactly where the seed had it.
+        assert importlib.util.find_spec(submodule) is None, (
+            f"{submodule} exists now — un-skip {fname}")
+
+
+# ---------------------------------------------------------------------------
+# Equal-budget PHV acceptance (process executor)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_stage_dist_process_phv_matches_stage_batch(tiny_problem, seed):
+    """Acceptance: stage_dist(W=4, process executor) at equal global
+    budget reaches PHV >= single-process stage_batch(n_starts=4) on
+    spec_tiny — the sharded search loses nothing at this scale."""
+    budget = Budget(max_evals=2000, seed=seed)
+    # Both drivers at their registry defaults (iters_max=12, n_swaps=24,
+    # n_link_moves=24): W=4 one-chain process workers vs the 4-chain
+    # single-process driver. sync_every=6 gives two planned
+    # surrogate/front-sync rounds, then extra budget-draining rounds that
+    # intensify around the pooled front — at this operating point the
+    # sharded fleet clears the coordinated single process by ~0.01 PHV on
+    # every pinned seed (union front + restart rounds beat one process's
+    # lockstep sharing at equal budget).
+    sb = run(tiny_problem, "stage_batch", budget=budget,
+             config=dict(n_starts=4))
+    sd = run(tiny_problem, "stage_dist", budget=budget,
+             config=dict(n_workers=4, executor="process", n_starts=1,
+                         sync_every=6))
+    assert sd.extra["executor"] == "process"
+    assert sd.phv() >= sb.phv(), (
+        f"seed {seed}: dist {sd.phv():.6f} < batch {sb.phv():.6f}")
+    # Equal-budget discipline: the sharded run spends what the plan allows
+    # (global cap + at most one in-flight dispatch per worker, plus the
+    # worker's mesh anchor and starts evaluation).
+    assert sd.n_evals <= 2000 + 4 * (2 * (24 + 24) + 2)

@@ -14,13 +14,16 @@ from repro.noc import (Budget, NocProblem, RunResult, design_from_json,
                        design_to_json, get_optimizer, named_spec,
                        optimizer_names, run)
 
-ALL_OPTIMIZERS = ("amosa", "local", "nsga2", "pcbb", "stage", "stage_batch")
+ALL_OPTIMIZERS = ("amosa", "local", "nsga2", "pcbb", "stage", "stage_batch",
+                  "stage_dist")
 
 #: small-budget configs that exercise every optimizer in a few seconds
 SMALL_CONFIGS = {
     "stage": dict(iters_max=2, n_swaps=4, n_link_moves=4, max_local_steps=5),
     "stage_batch": dict(n_starts=2, iters_max=2, n_swaps=4, n_link_moves=4,
                         max_local_steps=5),
+    "stage_dist": dict(n_workers=2, executor="serial", iters_max=2,
+                       n_swaps=4, n_link_moves=4, max_local_steps=5),
     "amosa": dict(t_max=0.5, t_min=0.05, alpha=0.7, iters_per_temp=8),
     "nsga2": dict(pop_size=8, generations=2),
     "local": dict(n_starts=2, n_swaps=4, n_link_moves=4, max_steps=4),
@@ -52,9 +55,15 @@ def test_every_optimizer_returns_roundtrippable_runresult(
     """Acceptance: every registry optimizer runs under a shared Budget and
     its RunResult JSON round-trips to identical Pareto objectives."""
     problem, ev, ctx = tiny_problem
-    budget = Budget(max_evals=ev.n_evals + 400, seed=0)
-    res = run(problem, name, budget=budget, config=SMALL_CONFIGS[name],
-              ev=ev, ctx=ctx)
+    if get_optimizer(name).owns_result:
+        # Coordinator drivers (stage_dist) run on per-worker evaluators and
+        # refuse ev=/ctx= injection — run them standalone.
+        res = run(problem, name, budget=Budget(max_evals=400, seed=0),
+                  config=SMALL_CONFIGS[name])
+    else:
+        budget = Budget(max_evals=ev.n_evals + 400, seed=0)
+        res = run(problem, name, budget=budget, config=SMALL_CONFIGS[name],
+                  ev=ev, ctx=ctx)
     assert isinstance(res, RunResult) and res.optimizer == name
     assert len(res.designs) >= 1 and res.n_evals > 0 and res.n_calls > 0
     assert np.isfinite(res.phv())
@@ -146,6 +155,29 @@ def test_forest_backend_validated_at_construction():
         StageBatchConfig(forest_backend="bogus")
     assert StageConfig(forest_backend="pallas").forest_backend == "pallas"
     assert StageConfig().forest_backend is None  # inherit the problem's
+
+
+def test_stage_dist_config_validated_and_injection_refused(tiny_problem):
+    """StageDistConfig fails fast on bad knobs, and the owns-result driver
+    refuses the single-process ev=/ctx=/callback= conveniences instead of
+    silently mis-accounting them."""
+    from repro.noc import StageDistConfig
+
+    with pytest.raises(ValueError, match="executor"):
+        StageDistConfig(executor="threads")
+    with pytest.raises(ValueError, match="n_workers"):
+        StageDistConfig(n_workers=0)
+    with pytest.raises(ValueError, match="sync_every"):
+        StageDistConfig(sync_every=-1)
+    with pytest.raises(ValueError, match="forest_backend"):
+        StageDistConfig(forest_backend="bogus")
+    problem, ev, ctx = tiny_problem
+    with pytest.raises(ValueError, match="owns its RunResult"):
+        run(problem, "stage_dist", budget=Budget(max_evals=50),
+            config=SMALL_CONFIGS["stage_dist"], ev=ev, ctx=ctx)
+    with pytest.raises(ValueError, match="owns its RunResult"):
+        run(problem, "stage_dist", budget=Budget(max_evals=50),
+            config=SMALL_CONFIGS["stage_dist"], callback=print)
 
 
 def test_run_with_prespent_budget_reports_exhausted(tiny_problem):
