@@ -42,6 +42,7 @@ TRACKED = (
     "forest_pallas_interp_512_us",
     "stage_meta_search_us_per_step",
     "stage_dist_4w_us",
+    "stage_dist_ckpt_4w_us",
 )
 
 

@@ -31,11 +31,53 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def sweep_stale_tmp(directory: str) -> list[str]:
+    """Remove ``tmp.*`` files — the orphans of a save that died between
+    write and rename. Safe because every atomic writer here renames its
+    tmp away before another save can start; only call this when no save
+    targeting ``directory`` is in flight (manager init, post-rename gc).
+    Returns the removed names (for logging/tests)."""
+    removed = []
+    for name in os.listdir(directory):
+        if name.startswith("tmp."):
+            try:
+                os.remove(os.path.join(directory, name))
+                removed.append(name)
+            except OSError:
+                pass
+    return removed
+
+
+def atomic_replace(path: str, write_fn, mode: str = "wb") -> None:
+    """The crash-safe write protocol: serialize to ``tmp.<name>`` in the
+    target's directory, flush + fsync, then atomically rename over
+    ``path``. A crash at any point leaves either the old file or a stale
+    ``tmp.*`` (swept by :func:`sweep_stale_tmp`) — never a partial file
+    under the final name."""
+    directory = os.path.dirname(os.path.abspath(path))
+    tmp = os.path.join(directory, f"tmp.{os.path.basename(path)}")
+    with open(tmp, mode) as fh:
+        write_fn(fh)
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, path)
+
+
+def atomic_write_json(path: str, obj) -> None:
+    """JSON flavor of :func:`atomic_replace` — what `repro.dist`'s round
+    checkpoints use (DESIGN.md §9)."""
+    atomic_replace(path, lambda fh: json.dump(obj, fh), mode="w")
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
+        # A previous process that died between write and rename leaves a
+        # tmp.<step> forever; restore already ignores it, but the disk
+        # leak compounds across crash-loops — sweep on open.
+        sweep_stale_tmp(directory)
         self._pool = cf.ThreadPoolExecutor(max_workers=1)
         self._pending: cf.Future | None = None
 
@@ -50,13 +92,11 @@ class CheckpointManager:
             self.wait()
 
     def _write(self, step: int, leaves: list[np.ndarray]):
-        tmp = os.path.join(self.dir, f"tmp.{step}")
         final = os.path.join(self.dir, f"step_{step:08d}.npz")
-        with open(tmp, "wb") as fh:
-            np.savez(fh, **{f"leaf_{i}": a for i, a in enumerate(leaves)})
-            fh.flush()
-            os.fsync(fh.fileno())
-        os.rename(tmp, final)
+        atomic_replace(
+            final,
+            lambda fh: np.savez(fh, **{f"leaf_{i}": a
+                                       for i, a in enumerate(leaves)}))
         self._gc()
 
     def wait(self):
@@ -71,6 +111,10 @@ class CheckpointManager:
                 os.remove(os.path.join(self.dir, f"step_{s:08d}.npz"))
             except OSError:
                 pass
+        # Runs on the save thread strictly after our own tmp was renamed
+        # away, and saves are serialized (save() waits for the pending
+        # write) — any tmp.* here is a dead prior process's leak.
+        sweep_stale_tmp(self.dir)
 
     # ---------------------------------------------------------- restore
     def all_steps(self) -> list[int]:

@@ -10,9 +10,14 @@ surrogate training rows between rounds (:mod:`~repro.dist.sync`).
 Entry point: :func:`run_dist` — registered in the optimizer registry as
 ``"stage_dist"`` (``repro.noc run --optimizer stage_dist --workers K``).
 
-Fault tolerance: a worker that raises is recorded in the merged result's
-``extra["worker_failures"]`` and the coordinator returns the Pareto union
-of the survivors; only a run with *zero* surviving workers raises.
+Fault tolerance (DESIGN.md §9): every failed dispatch attempt — worker
+exception, deadline trip, pool breakage, rejected payload — is recorded
+as a structured record in the merged result's
+``extra["worker_failures"]``; shards get bounded, reseeded retries; the
+spawn pool is rebuilt on breakage; synced runs can checkpoint coordinator
+state each round and resume after a crash. The coordinator returns the
+Pareto union of the survivors; only a run with *zero* surviving workers
+raises.
 """
 
 from __future__ import annotations
@@ -22,16 +27,23 @@ import time
 
 from repro.noc.api import Budget, NocProblem, RunResult
 
+from .ckpt import RoundCheckpointer
+from .faults import (CORRUPT_PAYLOAD, CoordinatorKilled, FaultInjector,
+                     InjectedFault, check_faults)
 from .merge import merge_results, merged_pareto
-from .plan import Shard, plan_shards, round_seed, spawn_seeds, split_evenly
-from .sync import n_rounds, run_synced
-from .worker import EXECUTORS, check_executor, execute_shards, run_shard
+from .plan import (Shard, plan_shards, retry_seed, round_seed, spawn_seeds,
+                   split_evenly)
+from .sync import n_rounds, run_synced, validate_round_payload
+from .worker import (EXECUTORS, ShardPool, check_executor, execute_shards,
+                     run_shard, shard_pool)
 
 __all__ = [
-    "EXECUTORS", "Shard", "check_executor", "execute_shards",
-    "merge_results", "merged_pareto", "n_rounds", "plan_shards",
-    "round_seed", "run_dist", "run_shard", "run_synced", "spawn_seeds",
-    "split_evenly",
+    "CORRUPT_PAYLOAD", "CoordinatorKilled", "EXECUTORS", "FaultInjector",
+    "InjectedFault", "RoundCheckpointer", "Shard", "ShardPool",
+    "check_executor", "check_faults", "execute_shards", "merge_results",
+    "merged_pareto", "n_rounds", "plan_shards", "retry_seed", "round_seed",
+    "run_dist", "run_shard", "run_synced", "shard_pool", "spawn_seeds",
+    "split_evenly", "validate_round_payload",
 ]
 
 
@@ -70,17 +82,36 @@ def run_dist(problem: NocProblem, budget: Budget, cfg) -> RunResult:
     t0 = time.perf_counter()
     shards = plan_shards(problem, budget, cfg.n_workers)
 
+    dist_info: dict = {"pool_rebuilds": 0, "resumed_from_round": None,
+                       "checkpoint": None}
     if cfg.sync_every > 0:
-        results, failure_rows = run_synced(problem, budget, cfg)
+        results, failure_rows, dist_info = run_synced(problem, budget, cfg)
     else:
         stage_cfg = _stage_config_json(cfg)
         tasks = [(s.problem.to_json(), s.budget.to_json(), s.budget.seed,
                   stage_cfg, s.worker_id) for s in shards]
-        raw, failures = _worker.execute_shards(
-            _worker.run_shard, tasks, cfg.executor)
+        faults = tuple(getattr(cfg, "faults", ()) or ())
+        injector = FaultInjector(faults=faults) if faults else None
+
+        def _reseed(orig_args, attempt):
+            # Same shard, fresh trajectory: only the dispatch seed moves.
+            return (orig_args[:2] + (retry_seed(orig_args[2], attempt),)
+                    + orig_args[3:])
+
+        with _worker.shard_pool(cfg.executor, cfg.n_workers) as pool:
+            raw, failures = _worker.execute_shards(
+                _worker.run_shard, tasks, cfg.executor, pool=pool,
+                meta=[(s.worker_id, 0) for s in shards],
+                timeout_s=getattr(cfg, "shard_timeout_s", None),
+                max_retries=int(getattr(cfg, "max_retries", 0) or 0),
+                backoff_s=float(getattr(cfg, "retry_backoff_s", 0.0) or 0.0),
+                retry_args=_reseed, injector=injector,
+                validate=_worker.validate_result_payload)
+            if isinstance(pool, _worker.ShardPool):
+                dist_info["pool_rebuilds"] = pool.rebuilds
         results = [RunResult.from_json(raw[i]) for i in sorted(raw)]
-        failure_rows = [[shards[i].worker_id, 0, msg]
-                        for i, msg in sorted(failures.items())]
+        failure_rows = [rec for i in sorted(failures)
+                        for rec in failures[i]]
 
     if not results:
         raise RuntimeError(
@@ -101,6 +132,9 @@ def run_dist(problem: NocProblem, budget: Budget, cfg) -> RunResult:
     extra["sync_every"] = int(cfg.sync_every)
     extra["worker_seeds"] = [s.budget.seed for s in shards]
     extra["worker_failures"] = failure_rows
+    extra["pool_rebuilds"] = dist_info.get("pool_rebuilds", 0)
+    extra["resumed_from_round"] = dist_info.get("resumed_from_round")
+    extra["checkpoint"] = dist_info.get("checkpoint")
     exhausted = merged.exhausted
     if budget.max_evals is not None and merged.n_evals >= budget.max_evals:
         exhausted = True

@@ -1,0 +1,175 @@
+"""Deterministic fault injection for the distributed layer (DESIGN.md §9).
+
+Every degradation path the resilience substrate promises — deadline
+trips, bounded retries, spawn-pool rebuilds, corrupt-payload rejection,
+mid-run coordinator death — is pinned by tests *through this module*
+rather than asserted in prose. A :class:`FaultInjector` is plain data
+(a tuple of fault dicts plus an optional seeded random crash rate), so
+it pickles into spawn children and serializes into a
+``StageDistConfig`` / ``RunResult.config`` unchanged.
+
+Fault dicts::
+
+    {"kind": "crash",   "worker_id": 1, "round": 0, "attempt": 0}
+    {"kind": "abort",   "worker_id": 1, "round": 0, "attempt": 0}
+    {"kind": "hang",    "worker_id": 2, "round": 1, "attempt": 0,
+     "hang_s": 3.0}
+    {"kind": "corrupt", "worker_id": 0, "round": 0, "attempt": 0}
+    {"kind": "kill_coordinator", "round": 1}
+
+``worker_id: None`` (or omitted) matches every worker; ``round`` and
+``attempt`` default to 0 and must match exactly — which is what makes a
+fault a *scripted point event*: the retry of a crashed attempt (a new
+``attempt``) runs clean unless another fault targets it.
+
+Kinds:
+
+``crash``
+    Raise :class:`InjectedFault` in place of the shard function — an
+    ordinary worker exception (retriable, recorded with traceback).
+``abort``
+    A *hard* death. In a spawn child: ``os._exit`` — the real
+    ``BrokenProcessPool`` path, poisoning the pool exactly like a
+    segfault. In-process executors have no survivable equivalent, so it
+    degrades to ``crash`` (documented, not hidden).
+``hang``
+    Sleep ``hang_s`` seconds before running the shard — drives the
+    deadline path: preemptive ``fut.result(timeout=)`` + pool rebuild
+    under the process executor, post-hoc elapsed check in-process.
+``corrupt``
+    Return a mangled payload instead of running the shard — drives the
+    coordinator-side payload validation (phase ``"validate"``).
+``kill_coordinator``
+    Consulted by :func:`repro.dist.sync.run_synced` at the round
+    boundary *after* the round checkpoint is saved: raises
+    :class:`CoordinatorKilled`, the seam the interrupt/resume
+    determinism tests pull.
+
+The seeded random mode (``p_crash`` > 0) draws one uniform per
+``(seed, worker_id, round, attempt)`` position via ``SeedSequence`` —
+deterministic chaos, independent of dispatch order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import os
+import time
+
+import numpy as np
+
+FAULT_KINDS = ("crash", "abort", "hang", "corrupt", "kill_coordinator")
+
+#: payload returned by a "corrupt" fault — fails any structural
+#: validation (it is not a RunResult / round payload), which is the point.
+CORRUPT_PAYLOAD = {"__corrupt__": "injected payload corruption"}
+
+
+class InjectedFault(RuntimeError):
+    """The exception a scripted ``crash`` (or in-process ``abort``) raises."""
+
+
+class CoordinatorKilled(RuntimeError):
+    """Raised at a sync-round boundary by a ``kill_coordinator`` fault —
+    stands in for the coordinator process dying after the round's
+    checkpoint hit disk. Resume with ``StageDistConfig(resume=True)``."""
+
+
+def check_faults(faults) -> None:
+    """Validate a fault list at config construction (not mid-run, after
+    evaluation budget has been spent on the rounds before the typo)."""
+    for f in faults or ():
+        if not isinstance(f, dict):
+            raise ValueError(f"each fault must be a dict, got {type(f).__name__}")
+        kind = f.get("kind")
+        if kind not in FAULT_KINDS:
+            raise ValueError(
+                f"fault kind must be one of {FAULT_KINDS}, got {kind!r}")
+        for key in ("round", "attempt"):
+            if int(f.get(key, 0)) < 0:
+                raise ValueError(f"fault {key} must be >= 0, got {f[key]}")
+        if f.get("worker_id") is not None and int(f["worker_id"]) < 0:
+            raise ValueError(
+                f"fault worker_id must be >= 0 or None, got {f['worker_id']}")
+        if float(f.get("hang_s", 0.0)) < 0:
+            raise ValueError(f"fault hang_s must be >= 0, got {f['hang_s']}")
+        unknown = set(f) - {"kind", "worker_id", "round", "attempt", "hang_s"}
+        if unknown:
+            raise ValueError(f"unknown fault keys {sorted(unknown)} in {f}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultInjector:
+    """Plain-data fault script: scripted point faults plus an optional
+    seeded random crash rate. Picklable (crosses the spawn boundary) and
+    JSON-trivial (lives inside ``StageDistConfig.faults``)."""
+
+    faults: tuple = ()
+    p_crash: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults or ()))
+        check_faults(self.faults)
+        if not 0.0 <= self.p_crash <= 1.0:
+            raise ValueError(f"p_crash must be in [0, 1], got {self.p_crash}")
+
+    # ------------------------------------------------------------ matching
+    def match(self, worker_id: int, round_idx: int, attempt: int) -> dict | None:
+        """First scripted fault targeting this (worker, round, attempt)
+        dispatch, or a synthesized crash from the seeded random mode."""
+        for f in self.faults:
+            if f["kind"] == "kill_coordinator":
+                continue
+            wid = f.get("worker_id")
+            if wid is not None and int(wid) != int(worker_id):
+                continue
+            if int(f.get("round", 0)) != int(round_idx):
+                continue
+            if int(f.get("attempt", 0)) != int(attempt):
+                continue
+            return f
+        if self.p_crash > 0.0:
+            ss = np.random.SeedSequence(
+                [int(self.seed), int(worker_id), int(round_idx), int(attempt)])
+            if np.random.default_rng(ss).random() < self.p_crash:
+                return {"kind": "crash", "worker_id": int(worker_id),
+                        "round": int(round_idx), "attempt": int(attempt)}
+        return None
+
+    def kills_coordinator(self, round_idx: int) -> bool:
+        return any(f["kind"] == "kill_coordinator"
+                   and int(f.get("round", 0)) == int(round_idx)
+                   for f in self.faults)
+
+
+def call_with_faults(injector: FaultInjector | None, worker_id: int,
+                     round_idx: int, attempt: int, fn, args: tuple):
+    """Run ``fn(*args)`` under the injector — THE worker-boundary wrapper.
+
+    Module-level so the process executor can pickle it by reference and
+    act faults out *inside the child* (an ``abort`` really breaks the
+    pool; a ``hang`` really occupies a pool slot until the coordinator's
+    deadline kills it). ``injector=None`` is the zero-overhead no-fault
+    path: a plain ``fn(*args)``.
+    """
+    if injector is not None:
+        act = injector.match(worker_id, round_idx, attempt)
+        if act is not None:
+            kind = act["kind"]
+            where = (f"worker {worker_id}, round {round_idx}, "
+                     f"attempt {attempt}")
+            if kind == "crash":
+                raise InjectedFault(f"injected crash ({where})")
+            if kind == "abort":
+                if multiprocessing.parent_process() is not None:
+                    os._exit(134)  # hard child death -> BrokenProcessPool
+                raise InjectedFault(
+                    f"injected abort ({where}); in-process executors have "
+                    "no survivable hard-death, degraded to crash")
+            if kind == "corrupt":
+                return dict(CORRUPT_PAYLOAD)
+            if kind == "hang":
+                time.sleep(float(act.get("hang_s", 0.0)))
+    return fn(*args)

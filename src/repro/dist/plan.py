@@ -68,6 +68,28 @@ def round_seed(worker_seed: int, round_idx: int) -> int:
     return int(ss.generate_state(1, np.uint32)[0])
 
 
+#: spawn-key tag distinguishing retry streams from round streams: without
+#: it ``retry_seed(s, k)`` would collide with ``round_seed(s, k)`` and a
+#: retried round-0 dispatch would replay round k's trajectory.
+_RETRY_TAG = 0x52455452  # "RETR"
+
+
+def retry_seed(dispatch_seed: int, attempt: int) -> int:
+    """Deterministic per-attempt seed for a retried shard dispatch.
+
+    Attempt 0 is the dispatch seed itself (the no-fault path is
+    untouched); attempt ``a`` >= 1 folds the attempt index through a
+    tagged SeedSequence — a retried shard samples a *different*
+    trajectory rather than deterministically replaying the inputs that
+    just crashed or hung (DESIGN.md §9)."""
+    if attempt < 0:
+        raise ValueError(f"attempt must be >= 0, got {attempt}")
+    if attempt == 0:
+        return int(dispatch_seed)
+    ss = np.random.SeedSequence([int(dispatch_seed), _RETRY_TAG, int(attempt)])
+    return int(ss.generate_state(1, np.uint32)[0])
+
+
 @dataclasses.dataclass(frozen=True)
 class Shard:
     """One worker's unit of work: (problem, budget) with the worker's own

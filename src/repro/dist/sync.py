@@ -1,4 +1,4 @@
-"""Per-round surrogate + front sync across workers (DESIGN.md §8).
+"""Per-round surrogate + front sync across workers (DESIGN.md §8–§9).
 
 ``stage_batch`` shares one surrogate and one global front across its K
 in-process chains; this module generalizes both tricks across
@@ -36,9 +36,18 @@ a fresh per-round evaluator (process workers cannot carry evaluator
 state between rounds), so each round's mesh-anchor evaluation is paid
 inside its slice, like any other evaluation.
 
-A worker that fails in round r is dropped from later rounds (its earlier
-rounds' results still merge); failures are reported to the coordinator
-as ``(worker_id, round, message)`` rows.
+Resilience (DESIGN.md §9): dispatches carry per-shard deadlines and
+bounded reseeded retries (``cfg.shard_timeout_s`` / ``max_retries`` /
+``retry_backoff_s`` threaded into :func:`repro.dist.worker.
+execute_shards`); payloads are structurally validated before pooling; a
+worker whose attempts are exhausted in round r is dropped from later
+rounds (its earlier rounds' results still merge); every failed attempt
+is reported as a structured record. With ``cfg.checkpoint_dir`` set, the
+coordinator persists its complete state after every round
+(:class:`repro.dist.ckpt.RoundCheckpointer`, atomic tmp → fsync →
+rename) and ``cfg.resume=True`` restores it — an interrupted-then-
+resumed run is byte-identical to the uninterrupted one. Scripted faults
+(``cfg.faults``) exercise all of it deterministically.
 """
 
 from __future__ import annotations
@@ -48,13 +57,25 @@ import numpy as np
 from repro.core.local_search import ParetoSet
 from repro.noc.api import Budget, NocProblem, RunResult, design_to_json
 
-from .plan import plan_shards, round_seed, split_evenly
+from .ckpt import RoundCheckpointer
+from .faults import CoordinatorKilled, FaultInjector
+from .plan import plan_shards, retry_seed, round_seed, split_evenly
 
 #: history tags are ``worker_id * ROUND_TAG_STRIDE + round`` — unique per
 #: (worker, round) and worker-major when sorted. Also the hard cap on
 #: rounds (unreachable in practice: every dispatched round costs >= 1
 #: evaluation, so rounds are bounded by the eval budget long before it).
 ROUND_TAG_STRIDE = 100_000
+
+#: config fields that shape the search trajectory — the run identity a
+#: resume must match. Deliberately excludes the knobs that may legally
+#: differ between the interrupted and the resuming invocation: executor
+#: (where shards run, not what they compute), fault scripts (the resume
+#: drops the kill), timeout/retry tuning, and checkpoint_dir/resume
+#: themselves.
+TRAJECTORY_FIELDS = ("n_workers", "sync_every", "iters_max", "n_starts",
+                     "n_swaps", "n_link_moves", "max_local_steps",
+                     "forest_kwargs", "forest_backend")
 
 
 def n_rounds(iters_max: int, sync_every: int) -> int:
@@ -65,13 +86,39 @@ def n_rounds(iters_max: int, sync_every: int) -> int:
     return -(-iters_max // sync_every)
 
 
+def validate_round_payload(payload) -> None:
+    """Structural check on a worker's round payload before it is pooled —
+    the coordinator's defense against corrupt/truncated returns (an
+    injected ``corrupt`` fault lands here, phase ``"validate"``)."""
+    if not isinstance(payload, dict):
+        raise ValueError(f"round payload must be a dict, "
+                         f"got {type(payload).__name__}")
+    missing = {"result", "x_train", "y_train", "next_starts"} - set(payload)
+    if missing:
+        raise ValueError(f"round payload missing keys {sorted(missing)}")
+    result = payload["result"]
+    if not isinstance(result, dict) or not {"designs", "objs",
+                                            "n_evals"} <= set(result):
+        raise ValueError("round payload 'result' is not a RunResult JSON")
+
+
+def _reseed_round_args(orig_args: tuple, attempt: int) -> tuple:
+    """Retry dispatch for attempt ``attempt``: same shard, fresh
+    trajectory — only the seed (arg 2, which ``run_shard_round`` folds
+    into the budget) changes, via :func:`repro.dist.plan.retry_seed`."""
+    return (orig_args[:2] + (retry_seed(orig_args[2], attempt),)
+            + orig_args[3:])
+
+
 def run_synced(problem: NocProblem, budget: Budget, cfg,
-               ) -> tuple[list[RunResult], list[list]]:
-    """Execute the round-based synced run; returns ``(results,
-    failures)`` where ``results`` are one RunResult per surviving
-    (worker, round) — history-tagged ``worker_id * ROUND_TAG_STRIDE +
-    round`` so the merge orders histories by worker then round — and
-    ``failures`` are ``[worker_id, round, message]`` rows.
+               ) -> tuple[list[RunResult], list[dict], dict]:
+    """Execute the round-based synced run; returns ``(results, failures,
+    info)`` where ``results`` are one RunResult per surviving (worker,
+    round) — history-tagged ``worker_id * ROUND_TAG_STRIDE + round`` so
+    the merge orders histories by worker then round — ``failures`` are
+    structured per-attempt records (worker_id, round, attempt, phase,
+    error, traceback), and ``info`` carries resilience diagnostics
+    (pool_rebuilds, checkpoint stats, resumed_from_round).
 
     ``cfg`` is the :class:`repro.noc.optimizers.StageDistConfig` (only
     its fields are read; no import, so repro.dist never imports the
@@ -95,6 +142,13 @@ def run_synced(problem: NocProblem, budget: Budget, cfg,
         "forest_backend": cfg.forest_backend,
     }
     problem_json = problem.to_json()
+    plan_id = {f: getattr(cfg, f) for f in TRAJECTORY_FIELDS}
+
+    faults = tuple(getattr(cfg, "faults", ()) or ())
+    injector = FaultInjector(faults=faults) if faults else None
+    timeout_s = getattr(cfg, "shard_timeout_s", None)
+    max_retries = int(getattr(cfg, "max_retries", 0) or 0)
+    backoff_s = float(getattr(cfg, "retry_backoff_s", 0.0) or 0.0)
 
     pooled_x: list[list[float]] = []
     pooled_y: list[float] = []
@@ -124,7 +178,60 @@ def run_synced(problem: NocProblem, budget: Budget, cfg,
         starts_by_wid[s.worker_id] = chain_starts
     alive = [s.worker_id for s in shards]
     results: list[RunResult] = []
-    failures: list[list] = []
+    failures: list[dict] = []
+
+    # ------------------------------------------------------ checkpointing
+    ckpt: RoundCheckpointer | None = None
+    resumed_from: int | None = None
+    start_round = 0
+    restored_done = False
+    if getattr(cfg, "checkpoint_dir", None):
+        ckpt = RoundCheckpointer(cfg.checkpoint_dir)
+        if getattr(cfg, "resume", False):
+            state = ckpt.load_round()
+            if (state["problem"] != problem_json
+                    or state["budget"] != budget.to_json()
+                    or state["plan"] != plan_id):
+                raise ValueError(
+                    f"checkpoint in {cfg.checkpoint_dir!r} belongs to a "
+                    "different run (problem/budget/trajectory-config "
+                    "mismatch); refusing to resume")
+            alive = [int(w) for w in state["alive"]]
+            spent_evals = {int(w): int(v)
+                           for w, v in state["spent_evals"].items()}
+            spent_calls = {int(w): int(v)
+                           for w, v in state["spent_calls"].items()}
+            starts_by_wid = {int(w): v
+                             for w, v in state["starts_by_wid"].items()}
+            pooled_x = state["pooled_x"]
+            pooled_y = state["pooled_y"]
+            pooled_front = state["pooled_front"]
+            results = [RunResult.from_json(j) for j in state["results"]]
+            failures = list(state["failures"])
+            resumed_from = int(state["round"])
+            start_round = resumed_from + 1
+            restored_done = bool(state.get("done", False))
+
+    def _snapshot(done: bool) -> dict:
+        """Complete coordinator state after a round — everything
+        :func:`run_synced` mutates, plus the run identity. ``done``
+        records whether the run had decided to stop (a resume must not
+        dispatch extra rounds the uninterrupted run would not have)."""
+        return {
+            "problem": problem_json,
+            "budget": budget.to_json(),
+            "plan": plan_id,
+            "done": bool(done),
+            "alive": list(alive),
+            "spent_evals": {str(w): v for w, v in spent_evals.items()},
+            "spent_calls": {str(w): v for w, v in spent_calls.items()},
+            "starts_by_wid": {str(w): v for w, v in starts_by_wid.items()},
+            "pooled_x": pooled_x,
+            "pooled_y": pooled_y,
+            "pooled_front": pooled_front,
+            "results": [rr.to_json() for rr in results],
+            "failures": failures,
+        }
 
     def _room(wid: int, r: int) -> tuple[int | None, int | None]:
         """Cumulative remaining (evals, calls) for worker ``wid`` at
@@ -184,12 +291,19 @@ def run_synced(problem: NocProblem, budget: Budget, cfg,
             # remaining shard, so nobody-dispatchable means truly done.
             return planned
         round_results, round_failures = _worker.execute_shards(
-            _worker.run_shard_round, tasks, cfg.executor, pool=pool)
+            _worker.run_shard_round, tasks, cfg.executor, pool=pool,
+            meta=[(wid, r) for wid in dispatched],
+            timeout_s=timeout_s, max_retries=max_retries,
+            backoff_s=backoff_s, retry_args=_reseed_round_args,
+            injector=injector, validate=validate_round_payload)
 
+        # Every failed attempt is reported; a worker is dropped only if
+        # it exhausted its attempts (index absent from round_results).
         dropped = []
-        for idx, msg in sorted(round_failures.items()):
-            failures.append([dispatched[idx], r, msg])
-            dropped.append(dispatched[idx])
+        for idx in sorted(round_failures):
+            failures.extend(round_failures[idx])
+            if idx not in round_results:
+                dropped.append(dispatched[idx])
         # Pool in sorted (worker) order — the shared training set and
         # front must be independent of worker completion order for the
         # next round to be deterministic.
@@ -225,13 +339,33 @@ def run_synced(problem: NocProblem, budget: Budget, cfg,
             return False
         return True
 
-    # One pool for every round: spawn children pay their interpreter +
-    # JAX import once. (A hard child crash breaks the shared pool — the
-    # remaining rounds then fail fast and report, which is the honest
-    # outcome for a dead fleet.)
-    with _worker.shard_pool(cfg.executor, cfg.n_workers) as pool:
-        r = 0
-        while alive and r < ROUND_TAG_STRIDE and _one_round(r, pool):
-            r += 1
+    info: dict = {"pool_rebuilds": 0, "resumed_from_round": resumed_from,
+                  "checkpoint": None}
 
-    return results, failures
+    # One pool for every round: spawn children pay their interpreter +
+    # JAX import once; a broken pool is killed and rebuilt by
+    # execute_shards, charging the in-flight shards a retry.
+    with _worker.shard_pool(cfg.executor, cfg.n_workers) as pool:
+        try:
+            r = start_round
+            while not restored_done and alive and r < ROUND_TAG_STRIDE:
+                cont = _one_round(r, pool)
+                if ckpt is not None:
+                    ckpt.save_round(r, _snapshot(done=not cont))
+                if injector is not None and injector.kills_coordinator(r):
+                    saved = "saved" if ckpt is not None else "NOT saved"
+                    raise CoordinatorKilled(
+                        f"injected coordinator kill after round {r} "
+                        f"(checkpoint {saved})")
+                if not cont:
+                    break
+                r += 1
+        finally:
+            if isinstance(pool, _worker.ShardPool):
+                info["pool_rebuilds"] = pool.rebuilds
+    if ckpt is not None:
+        info["checkpoint"] = {"dir": ckpt.dir, "n_saves": ckpt.n_saves,
+                              "save_s": ckpt.save_s,
+                              "rounds_on_disk": ckpt.rounds()}
+
+    return results, failures, info

@@ -26,7 +26,10 @@ Executor matrix (DESIGN.md §8):
 
 Failures are collected, not raised: :func:`execute_shards` returns
 ``(results, failures)`` and the coordinator merges the survivors,
-reporting the failures in ``RunResult.extra`` diagnostics.
+reporting every failed attempt as a structured record (worker id, round,
+attempt, phase, error, traceback) in ``RunResult.extra`` diagnostics.
+Deadlines, bounded reseeded retries, and spawn-pool rebuilds live here
+too — the resilience contract is DESIGN.md §9.
 """
 
 from __future__ import annotations
@@ -34,8 +37,11 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import multiprocessing
+import time
+import traceback
 from concurrent.futures import ProcessPoolExecutor
 
+from repro.dist.faults import call_with_faults
 from repro.noc.api import Budget, NocProblem, RunResult
 
 EXECUTORS = ("serial", "process", "jax")
@@ -184,69 +190,324 @@ def run_shard_round(problem_json: dict, budget_json: dict, seed: int,
     }
 
 
+def validate_result_payload(payload) -> None:
+    """Structural check on a ``run_shard`` payload (a RunResult JSON)
+    before the coordinator merges it — the corrupt-payload defense for
+    the no-sync path (phase ``"validate"`` on rejection)."""
+    if not isinstance(payload, dict):
+        raise ValueError(
+            f"shard payload must be a dict, got {type(payload).__name__}")
+    missing = {"designs", "objs", "n_evals", "history"} - set(payload)
+    if missing:
+        raise ValueError(
+            f"shard payload is not a RunResult JSON; missing {sorted(missing)}")
+
+
 # --------------------------------------------------------------------------
 # Executors
 # --------------------------------------------------------------------------
+class _ShardTimeout(RuntimeError):
+    """An in-process shard overran its deadline (detected post-hoc)."""
+
+
+class _ValidationFailed(RuntimeError):
+    """A shard returned a payload the coordinator's validator rejected."""
+
+
+class ShardPool:
+    """Rebuildable handle around a spawn ``ProcessPoolExecutor``.
+
+    A hung or hard-died child poisons a process pool: a hang occupies a
+    slot forever, an ``os._exit``/segfault marks the whole pool broken.
+    Either way the only recovery is *kill the children and start over* —
+    :meth:`rebuild` does exactly that (``rebuilds`` counts how often, for
+    ``RunResult.extra`` diagnostics). Spawn start method throughout: fork
+    after JAX initializes its runtime threads can deadlock, so children
+    pay a fresh interpreter + import instead.
+    """
+
+    def __init__(self, n_workers: int):
+        self.n_workers = max(1, int(n_workers))
+        self.rebuilds = 0
+        self._pool = self._make()
+
+    def _make(self) -> ProcessPoolExecutor:
+        return ProcessPoolExecutor(
+            max_workers=self.n_workers,
+            mp_context=multiprocessing.get_context("spawn"))
+
+    def submit(self, fn, *args):
+        return self._pool.submit(fn, *args)
+
+    def kill(self) -> None:
+        """Tear the pool down without waiting on its children — the only
+        way out when one of them is hung."""
+        procs = list(getattr(self._pool, "_processes", None or {}).values())
+        self._pool.shutdown(wait=False, cancel_futures=True)
+        for p in procs:
+            try:
+                p.terminate()
+            except (OSError, ValueError):
+                pass
+        for p in procs:
+            try:
+                p.join(timeout=5.0)
+            except (OSError, ValueError, AssertionError):
+                pass
+
+    def rebuild(self) -> None:
+        self.kill()
+        self._pool = self._make()
+        self.rebuilds += 1
+
+    def shutdown(self) -> None:
+        try:
+            self._pool.shutdown(wait=True, cancel_futures=True)
+        except Exception:  # noqa: BLE001 — a broken pool may refuse politely
+            self.kill()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc_info):
+        self.shutdown()
+        return False
+
+
 @contextlib.contextmanager
 def shard_pool(executor: str, n_workers: int):
     """Reusable process pool for multi-round dispatch (repro.dist.sync):
     spawn-started children pay interpreter + JAX import once, not once
-    per round. Yields None for the in-process executors."""
+    per round. Yields a :class:`ShardPool` for ``process``, None for the
+    in-process executors."""
     check_executor(executor)
     if executor != "process":
         yield None
         return
-    mp_ctx = multiprocessing.get_context("spawn")
-    with ProcessPoolExecutor(max_workers=max(1, n_workers),
-                             mp_context=mp_ctx) as pool:
+    with ShardPool(n_workers) as pool:
         yield pool
 
 
-def execute_shards(fn, arg_tuples: list[tuple], executor: str = "serial",
-                   pool=None) -> tuple[dict[int, dict], dict[int, str]]:
-    """Run ``fn(*args)`` for every entry of ``arg_tuples`` under the
-    chosen executor. Entry ``i`` is shard ``i``; returns ``(results,
-    failures)`` keyed by shard index — a raising shard lands in
-    ``failures`` as ``"ExcType: message"`` instead of aborting the rest
-    (fault isolation; the coordinator merges the survivors).
+def _failure_record(worker_id: int, round_idx: int, attempt: int,
+                    phase: str, exc) -> dict:
+    """Structured failure record (DESIGN.md §9). ``phase`` is where the
+    dispatch died: ``"run"`` (worker raised), ``"timeout"`` (deadline),
+    ``"pool"`` (process pool broke — culprit unattributable), or
+    ``"validate"`` (payload rejected by the coordinator)."""
+    if isinstance(exc, BaseException):
+        error = f"{type(exc).__name__}: {exc}"
+        cause = getattr(exc, "__cause__", None)
+        if cause is not None and type(cause).__name__ == "_RemoteTraceback":
+            tb = str(cause)  # the child's stack, smuggled across the pickle
+        else:
+            tb = "".join(traceback.format_exception(exc))
+    else:
+        error = str(exc)
+        tb = ""
+    return {"worker_id": int(worker_id), "round": int(round_idx),
+            "attempt": int(attempt), "phase": str(phase),
+            "error": error, "traceback": tb}
 
-    ``pool`` (from :func:`shard_pool`) reuses one process pool across
-    calls; without it the ``process`` executor builds a one-shot pool.
+
+def _record_failure(failures: dict, idx: int, rec: dict) -> None:
+    failures.setdefault(idx, []).append(rec)
+
+
+def _run_validated(payload, validate):
+    if validate is not None:
+        try:
+            validate(payload)
+        except Exception as exc:  # noqa: BLE001 — any rejection counts
+            raise _ValidationFailed(str(exc)) from exc
+    return payload
+
+
+def execute_shards(fn, arg_tuples: list[tuple], executor: str = "serial",
+                   pool=None, *, meta: list[tuple[int, int]] | None = None,
+                   timeout_s: float | None = None, max_retries: int = 0,
+                   backoff_s: float = 0.0, retry_args=None, injector=None,
+                   validate=None) -> tuple[dict[int, dict],
+                                           dict[int, list[dict]]]:
+    """Run ``fn(*args)`` for every entry of ``arg_tuples`` under the
+    chosen executor, with per-shard deadlines and bounded retries.
+
+    Entry ``i`` is shard ``i``; returns ``(results, failures)`` keyed by
+    shard index. Every failed *attempt* appends a structured record (see
+    :func:`_failure_record`) to ``failures[i]`` — so an index present in
+    both maps means "succeeded after retries", and an index only in
+    ``failures`` is a shard that exhausted its attempts (the coordinator
+    merges the survivors; fault isolation, not abort).
+
+    Knobs (all keyword-only; defaults reproduce the legacy contract):
+
+    ``meta``
+        ``(worker_id, round_idx)`` per shard, for failure records and
+        fault matching. Defaults to ``(i, 0)``.
+    ``timeout_s``
+        Per-shard wall-clock deadline. Under ``process`` it is enforced
+        *preemptively* — ``fut.result(timeout=...)`` measured from wave
+        dispatch, and a trip kills + rebuilds the pool (the hung child
+        holds a slot; there is no gentler eviction). In-process executors
+        cannot preempt their own frame, so ``serial``/``jax`` check the
+        deadline *post-hoc*: an overrunning shard is charged a
+        ``"timeout"`` failure and its payload discarded, but it runs to
+        completion first (documented contract, DESIGN.md §9).
+    ``max_retries`` / ``backoff_s``
+        Up to ``max_retries`` re-dispatches per shard, sleeping
+        ``backoff_s * 2**(attempt-1)`` before attempt ``attempt``.
+    ``retry_args``
+        ``(orig_args, attempt) -> new_args`` — re-derives the dispatch
+        for attempt ``attempt`` (the coordinator reseeds via
+        :func:`repro.dist.plan.retry_seed`, so a retry samples a fresh
+        trajectory instead of replaying the crash). Default: retry the
+        identical args.
+    ``injector``
+        :class:`repro.dist.faults.FaultInjector` wrapped around the
+        worker boundary via ``call_with_faults`` (inside the child for
+        ``process``, so aborts/hangs are physically real).
+    ``validate``
+        Coordinator-side payload check; a raise becomes a ``"validate"``
+        failure (retriable — this is the corrupt-payload defense).
+
+    ``pool`` (a :class:`ShardPool` from :func:`shard_pool`) reuses one
+    process pool across calls; without it the ``process`` executor
+    builds a one-shot pool. On pool breakage every in-flight shard is
+    charged a ``"pool"`` failure (the culprit is unattributable) and
+    re-dispatched against the rebuilt pool if it has attempts left.
     """
     check_executor(executor)
-    results: dict[int, dict] = {}
-    failures: dict[int, str] = {}
+    if meta is None:
+        meta = [(i, 0) for i in range(len(arg_tuples))]
+    if max_retries < 0:
+        raise ValueError(f"max_retries must be >= 0, got {max_retries}")
 
     if executor == "process":
-        with contextlib.ExitStack() as stack:
-            if pool is None:
-                pool = stack.enter_context(
-                    shard_pool(executor, len(arg_tuples)))
-            futures = {i: pool.submit(fn, *args)
-                       for i, args in enumerate(arg_tuples)}
-            for i, fut in futures.items():
-                try:
-                    results[i] = fut.result()
-                except Exception as exc:  # noqa: BLE001 — fault isolation
-                    failures[i] = f"{type(exc).__name__}: {exc}"
-        return results, failures
+        return _execute_process(fn, arg_tuples, pool, meta, timeout_s,
+                                max_retries, backoff_s, retry_args,
+                                injector, validate)
+    return _execute_inline(fn, arg_tuples, executor, meta, timeout_s,
+                           max_retries, backoff_s, retry_args, injector,
+                           validate)
 
+
+def _execute_inline(fn, arg_tuples, executor, meta, timeout_s, max_retries,
+                    backoff_s, retry_args, injector, validate):
+    """serial/jax: in-process dispatch with an inline retry loop."""
     if executor == "jax":
         import jax
-
         devices = jax.devices()
-        for i, args in enumerate(arg_tuples):
-            dev = devices[i % len(devices)]
+    results: dict[int, dict] = {}
+    failures: dict[int, list[dict]] = {}
+    for i, orig_args in enumerate(arg_tuples):
+        wid, rnd = meta[i]
+        args = orig_args
+        for attempt in range(max_retries + 1):
+            if attempt > 0:
+                if backoff_s > 0:
+                    time.sleep(backoff_s * (2 ** (attempt - 1)))
+                if retry_args is not None:
+                    args = retry_args(orig_args, attempt)
+            t0 = time.monotonic()
             try:
-                with jax.default_device(dev):
-                    results[i] = fn(*args)
-            except Exception as exc:  # noqa: BLE001
-                failures[i] = f"{type(exc).__name__}: {exc}"
-        return results, failures
+                if executor == "jax":
+                    with jax.default_device(devices[i % len(devices)]):
+                        payload = call_with_faults(
+                            injector, wid, rnd, attempt, fn, args)
+                else:
+                    payload = call_with_faults(
+                        injector, wid, rnd, attempt, fn, args)
+                elapsed = time.monotonic() - t0
+                if timeout_s is not None and elapsed > timeout_s:
+                    raise _ShardTimeout(
+                        f"shard ran {elapsed:.3f}s, deadline {timeout_s}s "
+                        "(in-process deadlines are post-hoc: the shard ran "
+                        "to completion but its payload is discarded)")
+                results[i] = _run_validated(payload, validate)
+                break
+            except Exception as exc:  # noqa: BLE001 — fault isolation
+                phase = ("timeout" if isinstance(exc, _ShardTimeout)
+                         else "validate" if isinstance(exc, _ValidationFailed)
+                         else "run")
+                _record_failure(failures, i,
+                                _failure_record(wid, rnd, attempt, phase, exc))
+    return results, failures
 
-    for i, args in enumerate(arg_tuples):  # serial
-        try:
-            results[i] = fn(*args)
-        except Exception as exc:  # noqa: BLE001
-            failures[i] = f"{type(exc).__name__}: {exc}"
+
+def _execute_process(fn, arg_tuples, pool, meta, timeout_s, max_retries,
+                     backoff_s, retry_args, injector, validate):
+    """process: wave dispatch with preemptive deadlines + pool rebuild."""
+    from concurrent.futures import TimeoutError as FutTimeout
+    from concurrent.futures.process import BrokenProcessPool
+
+    results: dict[int, dict] = {}
+    failures: dict[int, list[dict]] = {}
+    own_pool = pool is None
+    if own_pool:
+        pool = ShardPool(len(arg_tuples))
+    try:
+        wave = [(i, 0, arg_tuples[i]) for i in range(len(arg_tuples))]
+        while wave:
+            delay = max((backoff_s * (2 ** (a - 1))
+                         for _, a, _ in wave if a > 0), default=0.0)
+            if delay > 0:
+                time.sleep(delay)
+            t0 = time.monotonic()
+            futs = []
+            for i, attempt, args in wave:
+                wid, rnd = meta[i]
+                futs.append((i, attempt, args, pool.submit(
+                    call_with_faults, injector, wid, rnd, attempt, fn, args)))
+            next_wave = []
+
+            def _retry(i, attempt, args):
+                if attempt < max_retries:
+                    new_args = (retry_args(arg_tuples[i], attempt + 1)
+                                if retry_args is not None else args)
+                    next_wave.append((i, attempt + 1, new_args))
+
+            disrupted = None  # reason string once the pool must be rebuilt
+            for i, attempt, args, fut in futs:
+                wid, rnd = meta[i]
+                if disrupted is not None and not fut.done():
+                    # Collateral of the rebuild-to-come: this shard was
+                    # in flight when the pool got poisoned.
+                    _record_failure(failures, i, _failure_record(
+                        wid, rnd, attempt, "pool", disrupted))
+                    _retry(i, attempt, args)
+                    continue
+                try:
+                    if timeout_s is None:
+                        payload = fut.result()
+                    else:
+                        remaining = t0 + timeout_s - time.monotonic()
+                        payload = fut.result(timeout=max(0.0, remaining))
+                    results[i] = _run_validated(payload, validate)
+                except FutTimeout:
+                    exc = _ShardTimeout(
+                        f"shard exceeded its {timeout_s}s deadline; pool "
+                        "killed and rebuilt")
+                    _record_failure(failures, i, _failure_record(
+                        wid, rnd, attempt, "timeout", exc))
+                    _retry(i, attempt, args)
+                    disrupted = (f"pool rebuilt after worker {wid} tripped "
+                                 f"its {timeout_s}s deadline")
+                except BrokenProcessPool as exc:
+                    _record_failure(failures, i, _failure_record(
+                        wid, rnd, attempt, "pool", exc))
+                    _retry(i, attempt, args)
+                    disrupted = f"{type(exc).__name__}: {exc}"
+                except _ValidationFailed as exc:
+                    _record_failure(failures, i, _failure_record(
+                        wid, rnd, attempt, "validate", exc))
+                    _retry(i, attempt, args)
+                except Exception as exc:  # noqa: BLE001 — fault isolation
+                    _record_failure(failures, i, _failure_record(
+                        wid, rnd, attempt, "run", exc))
+                    _retry(i, attempt, args)
+            if disrupted is not None:
+                pool.rebuild()
+            wave = next_wave
+    finally:
+        if own_pool:
+            pool.shutdown()
     return results, failures

@@ -459,6 +459,8 @@ def run(
     ev: Evaluator | None = None,
     ctx: PhvContext | None = None,
     track_phv: bool = False,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
 ) -> RunResult:
     """Run ``optimizer`` (a registry name — see ``repro.noc.optimizers``)
     on ``problem`` under ``budget``; returns a :class:`RunResult`.
@@ -469,12 +471,31 @@ def run(
     context (advanced reuse — e.g. cross-evaluating many runs on one jitted
     evaluator); by default both are built fresh, exactly as the legacy
     drivers built them.
+
+    ``checkpoint_dir``/``resume`` enable crash-safe per-round checkpoints
+    for coordinator optimizers that support them (``stage_dist`` with
+    ``sync_every >= 1`` — DESIGN.md §9): state is persisted atomically
+    after every sync round, and ``resume=True`` restores the latest
+    round and continues, byte-identical to the uninterrupted run.
     """
     from .optimizers import get_optimizer, make_config
 
     entry = get_optimizer(optimizer)
     budget = budget or Budget()
     cfg = make_config(entry, config)
+    if checkpoint_dir is not None or resume:
+        if not entry.owns_result or not hasattr(cfg, "checkpoint_dir"):
+            raise ValueError(
+                f"optimizer {entry.name!r} does not support checkpoint_dir/"
+                "resume (round checkpoints are a coordinator feature)")
+        updates: dict[str, Any] = {}
+        if checkpoint_dir is not None:
+            updates["checkpoint_dir"] = checkpoint_dir
+        if resume:
+            updates["resume"] = True
+        # replace() re-runs __post_init__, so the knob combination is
+        # validated exactly as if it had been in `config` to begin with.
+        cfg = dataclasses.replace(cfg, **updates)
 
     if entry.owns_result:
         # Coordinator drivers (e.g. "stage_dist") run their evaluations on

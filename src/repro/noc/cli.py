@@ -109,8 +109,16 @@ def cmd_run(args) -> int:
                 f"--workers only applies to --optimizer stage_dist "
                 f"(got {args.optimizer!r})")
         overrides["n_workers"] = args.workers
+    if (args.checkpoint_dir or args.resume) \
+            and args.optimizer != "stage_dist":
+        raise SystemExit(
+            f"--checkpoint-dir/--resume only apply to --optimizer "
+            f"stage_dist (got {args.optimizer!r})")
+    if args.resume and not args.checkpoint_dir:
+        raise SystemExit("--resume requires --checkpoint-dir")
     res = run(problem, args.optimizer, budget=budget,
-              config=overrides or None)
+              config=overrides or None,
+              checkpoint_dir=args.checkpoint_dir, resume=args.resume)
     if not args.quiet:
         print(_summary_line(res))
         for d_obj in np.asarray(res.objs):
@@ -193,6 +201,13 @@ def main(argv: list[str] | None = None) -> int:
                         help="stage_dist worker count (shorthand for "
                              "--set n_workers=K; shards the budget, merges "
                              "by Pareto union)")
+    ap_run.add_argument("--checkpoint-dir", default=None,
+                        help="stage_dist only: persist coordinator state "
+                             "after every sync round (crash-safe atomic "
+                             "writes; requires --set sync_every>=1)")
+    ap_run.add_argument("--resume", action="store_true",
+                        help="stage_dist only: restore the latest round "
+                             "from --checkpoint-dir and continue")
     ap_run.add_argument("--out", default=None, help="save RunResult JSON")
     ap_run.add_argument("--smoke", action="store_true",
                         help="fixed tiny self-check (CI tier-1)")

@@ -90,7 +90,17 @@ class StageDistConfig:
     that many STAGE iterations (0 = fully independent workers). The
     remaining knobs configure each worker's ``stage_batch`` run
     (``n_starts`` chains *per worker*, default 1 — W workers × 1 chain is
-    the like-for-like peer of ``stage_batch(n_starts=W)``)."""
+    the like-for-like peer of ``stage_batch(n_starts=W)``).
+
+    Resilience knobs (DESIGN.md §9): ``shard_timeout_s`` is the per-shard
+    wall-clock deadline (preemptive under ``process``, post-hoc for
+    in-process executors); ``max_retries`` / ``retry_backoff_s`` bound
+    the reseeded re-dispatches of a failed shard; ``checkpoint_dir``
+    persists coordinator state after every sync round (atomic writes)
+    and ``resume=True`` restores the latest round from it; ``faults`` is
+    a deterministic fault script (see :mod:`repro.dist.faults`) for
+    tests and chaos drills. All knobs are validated here, at
+    construction — not mid-run after budget has been spent."""
 
     n_workers: int = 4
     executor: str = "serial"
@@ -102,8 +112,15 @@ class StageDistConfig:
     max_local_steps: int = 10_000
     forest_kwargs: dict | None = None
     forest_backend: str | None = None
+    shard_timeout_s: float | None = None
+    max_retries: int = 1
+    retry_backoff_s: float = 0.0
+    checkpoint_dir: str | None = None
+    resume: bool = False
+    faults: tuple = ()
 
     def __post_init__(self):
+        from repro.dist.faults import check_faults
         from repro.dist.worker import check_executor
 
         if self.n_workers < 1:
@@ -113,6 +130,23 @@ class StageDistConfig:
                 f"sync_every must be >= 0, got {self.sync_every}")
         check_executor(self.executor)
         check_forest_backend(self.forest_backend, allow_none=True)
+        if self.shard_timeout_s is not None and self.shard_timeout_s <= 0:
+            raise ValueError(f"shard_timeout_s must be > 0 or None, "
+                             f"got {self.shard_timeout_s}")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {self.retry_backoff_s}")
+        if self.resume and not self.checkpoint_dir:
+            raise ValueError("resume=True requires checkpoint_dir")
+        if self.checkpoint_dir and self.sync_every < 1:
+            raise ValueError(
+                "checkpoint_dir requires sync_every >= 1 — round "
+                "checkpoints exist at sync-round boundaries only")
+        object.__setattr__(self, "faults", tuple(self.faults or ()))
+        check_faults(self.faults)
 
 
 @dataclasses.dataclass(frozen=True)

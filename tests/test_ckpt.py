@@ -1,0 +1,112 @@
+"""Atomic-write protocol + stale-temp hygiene (repro.ckpt) and the
+distributed round checkpointer built on it (repro.dist.ckpt).
+
+The stale-tmp satellite: a process that dies between writing
+``tmp.<name>`` and renaming it leaves the temp file forever; restore
+already ignored it, but the disk leak compounds across crash-loops.
+``sweep_stale_tmp`` removes the orphans and every checkpoint store sweeps
+on open.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.ckpt import atomic_replace, atomic_write_json, sweep_stale_tmp
+from repro.dist.ckpt import ROUND_STATE_FORMAT, RoundCheckpointer
+
+
+# ---------------------------------------------------------------------------
+# Atomic write helpers
+# ---------------------------------------------------------------------------
+def test_atomic_write_json_round_trips(tmp_path):
+    path = tmp_path / "state.json"
+    obj = {"a": [1, 2.5, None], "b": {"nested": "x"}}
+    atomic_write_json(str(path), obj)
+    with open(path) as fh:
+        assert json.load(fh) == obj
+    # No temp residue after a successful write.
+    assert [n for n in os.listdir(tmp_path) if n.startswith("tmp.")] == []
+
+
+def test_atomic_replace_crash_leaves_old_file_intact(tmp_path):
+    path = tmp_path / "state.json"
+    atomic_write_json(str(path), {"round": 1})
+
+    def dies(fh):
+        fh.write(b"partial garbage")
+        raise RuntimeError("simulated crash mid-write")
+
+    with pytest.raises(RuntimeError, match="mid-write"):
+        atomic_replace(str(path), dies)
+    # The old file is untouched; the wreck is a tmp.* orphan.
+    with open(path) as fh:
+        assert json.load(fh) == {"round": 1}
+    assert [n for n in os.listdir(tmp_path)
+            if n.startswith("tmp.")] == ["tmp.state.json"]
+    # ... which the sweep removes.
+    assert sweep_stale_tmp(str(tmp_path)) == ["tmp.state.json"]
+    assert [n for n in os.listdir(tmp_path) if n.startswith("tmp.")] == []
+
+
+def test_sweep_spares_non_tmp_files(tmp_path):
+    (tmp_path / "tmp.orphan").write_text("x")
+    (tmp_path / "round_000001.json").write_text("{}")
+    (tmp_path / "tmpnotdot").write_text("x")  # no "tmp." prefix: kept
+    assert sweep_stale_tmp(str(tmp_path)) == ["tmp.orphan"]
+    assert sorted(os.listdir(tmp_path)) == ["round_000001.json", "tmpnotdot"]
+
+
+# ---------------------------------------------------------------------------
+# CheckpointManager sweeps on open (the satellite's original home)
+# ---------------------------------------------------------------------------
+def test_checkpoint_manager_sweeps_stale_tmp_on_init(tmp_path):
+    jax = pytest.importorskip("jax")  # noqa: F841 — manager needs jax trees
+    from repro.ckpt import CheckpointManager
+
+    d = tmp_path / "ckpt"
+    d.mkdir()
+    (d / "tmp.00000007").write_bytes(b"dead prior process")
+    mgr = CheckpointManager(str(d), keep=2)
+    assert [n for n in os.listdir(d) if n.startswith("tmp.")] == []
+    # Saves still work and gc keeps sweeping.
+    (d / "tmp.00000009").write_bytes(b"another orphan")
+    mgr.save(1, {"w": np.ones(3)}, blocking=True)
+    assert [n for n in os.listdir(d) if n.startswith("tmp.")] == []
+    restored, step = mgr.restore({"w": np.zeros(3)})
+    assert step == 1 and np.array_equal(restored["w"], np.ones(3))
+
+
+# ---------------------------------------------------------------------------
+# RoundCheckpointer
+# ---------------------------------------------------------------------------
+def test_round_checkpointer_save_load_gc(tmp_path):
+    ck = RoundCheckpointer(str(tmp_path), keep=2)
+    for r in range(4):
+        ck.save_round(r, {"alive": [0, 1], "spent_evals": {"0": r}})
+    # keep=2: only the last two rounds survive gc.
+    assert ck.rounds() == [2, 3]
+    assert ck.latest_round() == 3
+    state = ck.load_round()
+    assert state["round"] == 3 and state["format"] == ROUND_STATE_FORMAT
+    assert state["spent_evals"] == {"0": 3}
+    assert ck.load_round(2)["spent_evals"] == {"0": 2}
+    assert ck.n_saves == 4 and ck.save_s > 0.0
+
+
+def test_round_checkpointer_sweeps_and_validates(tmp_path):
+    (tmp_path / "tmp.round_000000.json").write_text("dead write")
+    ck = RoundCheckpointer(str(tmp_path))
+    assert [n for n in os.listdir(tmp_path) if n.startswith("tmp.")] == []
+    # Empty dir: resume is a loud error, not a silent fresh start.
+    with pytest.raises(FileNotFoundError, match="nothing to resume"):
+        ck.load_round()
+    # Unknown format: refused, not misread.
+    with open(tmp_path / "round_000005.json", "w") as fh:
+        json.dump({"format": 999, "round": 5}, fh)
+    with pytest.raises(ValueError, match="format"):
+        ck.load_round(5)
+    with pytest.raises(ValueError, match="keep"):
+        RoundCheckpointer(str(tmp_path), keep=0)

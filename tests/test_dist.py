@@ -26,8 +26,8 @@ import numpy as np
 import pytest
 
 from repro.core import dominates, spec_tiny
-from repro.dist import (merge_results, n_rounds, plan_shards, spawn_seeds,
-                        split_evenly)
+from repro.dist import (merge_results, n_rounds, plan_shards, retry_seed,
+                        spawn_seeds, split_evenly)
 from repro.dist import worker as dist_worker
 from repro.noc import Budget, NocProblem, RunResult, run
 
@@ -268,10 +268,12 @@ def test_stage_dist_worker_failure_is_survivable(tiny_problem, monkeypatch):
     """Satellite: a raising worker lands in diagnostics and the merged
     Pareto set of the SURVIVING workers comes back instead of a crash."""
     real = dist_worker.run_shard
+    seeds_seen = []
 
     def flaky(problem_json, budget_json, seed, config_json=None,
               worker_id=0):
         if worker_id == 1:
+            seeds_seen.append(seed)
             raise RuntimeError("simulated worker crash")
         return real(problem_json, budget_json, seed, config_json,
                     worker_id=worker_id)
@@ -280,7 +282,19 @@ def test_stage_dist_worker_failure_is_survivable(tiny_problem, monkeypatch):
     res = run(tiny_problem, "stage_dist", budget=Budget(max_evals=360, seed=7),
               config=dict(SMALL, n_workers=3, executor="serial"))
     fails = res.extra["worker_failures"]
-    assert fails == [[1, 0, "RuntimeError: simulated worker crash"]]
+    # Default max_retries=1: attempt 0 plus one reseeded retry, both
+    # recorded as structured per-attempt records.
+    assert [(f["worker_id"], f["round"], f["attempt"], f["phase"])
+            for f in fails] == [(1, 0, 0, "run"), (1, 0, 1, "run")]
+    assert all(f["error"] == "RuntimeError: simulated worker crash"
+               for f in fails)
+    # Satellite: records carry the worker's actual stack, not just the
+    # one-line message.
+    assert all('raise RuntimeError("simulated worker crash")'
+               in f["traceback"] for f in fails)
+    # The retry was a DIFFERENT trajectory: reseeded via retry_seed.
+    assert seeds_seen == [seeds_seen[0],
+                          retry_seed(seeds_seen[0], 1)]
     assert len(res.designs) >= 1 and np.isfinite(res.phv())
     # Survivors only: both surviving workers' spans present, none for 1.
     assert [w for w, _, _ in res.extra["history_spans"]] == [0, 2]
@@ -371,7 +385,11 @@ def test_stage_dist_sync_worker_failure_drops_later_rounds(
     res = run(tiny_problem, "stage_dist", budget=Budget(max_evals=300, seed=2),
               config=dict(SMALL, n_workers=2, executor="serial",
                           sync_every=1, iters_max=3))
-    assert res.extra["worker_failures"] == [[1, 1, "RuntimeError: dies in round 1"]]
+    fails = res.extra["worker_failures"]
+    assert [(f["worker_id"], f["round"], f["attempt"]) for f in fails] \
+        == [(1, 1, 0), (1, 1, 1)]         # attempt 0 + one reseeded retry
+    assert all(f["error"] == "RuntimeError: dies in round 1"
+               and f["phase"] == "run" for f in fails)
     assert (1, 2) not in calls            # dropped from the last round
     assert (0, 2) in calls                # survivor kept going
     assert len(res.designs) >= 1
