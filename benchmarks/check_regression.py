@@ -43,6 +43,8 @@ TRACKED = (
     "stage_meta_search_us_per_step",
     "stage_dist_4w_us",
     "stage_dist_ckpt_4w_us",
+    "serve_submit_overhead_us",
+    "serve_8req_4w_us",
 )
 
 

@@ -205,6 +205,45 @@ def main(reduced: bool = False) -> None:
     finally:
         shutil.rmtree(ckpt_dir, ignore_errors=True)
 
+    # Multi-tenant optimization service (DESIGN.md §10). Two rows: the
+    # admission path (validate + canonical key + journal-free admit — the
+    # per-request tax every tenant pays at the door), and 8 concurrent
+    # requests multiplexed over one 4-slot fleet (wave-pump throughput;
+    # dominated by the optimization itself, which is the point — the
+    # service layer must not add more than routing overhead on top).
+    from repro.noc.server import Client
+
+    serve_problem = dist_problem.to_json()
+    serve_req_cfg = {"n_workers": 2, "sync_every": 1, "iters_max": 2,
+                     "n_swaps": 6, "n_link_moves": 6, "max_local_steps": 20}
+    serve_fleet = dict(n_workers=4, executor="serial", max_queue=64,
+                       max_inflight_per_tenant=64)
+    n_sub = 32
+    with Client.local(**serve_fleet) as cl:
+        with Timer() as t:
+            for i in range(n_sub):
+                ack = cl.submit(serve_problem,
+                                Budget(max_evals=60, seed=1000 + i).to_json(),
+                                dict(serve_req_cfg))
+                assert "error" not in ack, ack
+        submit_us = t.dt / n_sub * 1e6
+    row("serve_submit_overhead", submit_us,
+        "validate+canonical_key+admit;per_submit")
+    bench["serve_submit_overhead_us"] = submit_us
+
+    with Client.local(**serve_fleet) as cl:
+        acks = [cl.submit(serve_problem,
+                          Budget(max_evals=60, seed=i).to_json(),
+                          dict(serve_req_cfg), tenant=f"t{i}")
+                for i in range(8)]
+        with Timer() as t:
+            cl.drain()
+        n_done = sum(1 for a in acks
+                     if cl.status(a["id"])["status"] == "done")
+    row("serve_8req_4w", t.dt * 1e6,
+        f"requests=8;serial_fleet;done={n_done}")
+    bench["serve_8req_4w_us"] = t.dt * 1e6
+
     out = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                        "BENCH_netsim.json")
     with open(out, "w") as fh:

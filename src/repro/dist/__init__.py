@@ -28,22 +28,24 @@ import time
 from repro.noc.api import Budget, NocProblem, RunResult
 
 from .ckpt import RoundCheckpointer
-from .faults import (CORRUPT_PAYLOAD, CoordinatorKilled, FaultInjector,
-                     InjectedFault, check_faults)
+from .faults import (CORRUPT_PAYLOAD, SERVICE_FAULT_KINDS, CoordinatorKilled,
+                     FaultInjector, InjectedFault, ServerKilled, check_faults)
 from .merge import merge_results, merged_pareto
 from .plan import (Shard, plan_shards, retry_seed, round_seed, spawn_seeds,
                    split_evenly)
+from .state import SyncRunState
 from .sync import n_rounds, run_synced, validate_round_payload
 from .worker import (EXECUTORS, ShardPool, check_executor, execute_shards,
                      run_shard, shard_pool)
 
 __all__ = [
     "CORRUPT_PAYLOAD", "CoordinatorKilled", "EXECUTORS", "FaultInjector",
-    "InjectedFault", "RoundCheckpointer", "Shard", "ShardPool",
-    "check_executor", "check_faults", "execute_shards", "merge_results",
-    "merged_pareto", "n_rounds", "plan_shards", "retry_seed", "round_seed",
-    "run_dist", "run_shard", "run_synced", "shard_pool", "spawn_seeds",
-    "split_evenly", "validate_round_payload",
+    "InjectedFault", "RoundCheckpointer", "SERVICE_FAULT_KINDS",
+    "ServerKilled", "Shard", "ShardPool", "SyncRunState", "check_executor",
+    "check_faults", "execute_shards", "merge_results", "merged_pareto",
+    "n_rounds", "package_dist_result", "plan_shards", "retry_seed",
+    "round_seed", "run_dist", "run_shard", "run_synced", "shard_pool",
+    "spawn_seeds", "split_evenly", "validate_round_payload",
 ]
 
 
@@ -113,11 +115,38 @@ def run_dist(problem: NocProblem, budget: Budget, cfg) -> RunResult:
         failure_rows = [rec for i in sorted(failures)
                         for rec in failures[i]]
 
-    if not results:
-        raise RuntimeError(
-            f"all {cfg.n_workers} workers failed: {failure_rows}")
+    return package_dist_result(
+        problem, budget, cfg, results, failure_rows, dist_info,
+        [s.budget.seed for s in shards], time.perf_counter() - t0)
 
-    if len(results) > 1:
+
+def package_dist_result(problem: NocProblem, budget: Budget, cfg,
+                        results: list[RunResult], failure_rows: list[dict],
+                        dist_info: dict, worker_seeds: list[int],
+                        wall_s: float, *, partial: bool = False) -> RunResult:
+    """Merge surviving worker results into the final ``"stage_dist"``
+    :class:`RunResult` — the packaging tail shared by :func:`run_dist`
+    and the request state machines of :mod:`repro.noc.server`.
+
+    ``partial=True`` is the graceful-degradation path (deadline trip or
+    cancellation): instead of raising when nothing survived, it returns
+    the best-so-far front — possibly empty — flagged
+    ``extra["partial"] = True`` and ``exhausted=True`` (the budget was
+    truncated from outside, same contract as running it dry)."""
+    import numpy as np
+
+    if not results:
+        if not partial:
+            raise RuntimeError(
+                f"all {cfg.n_workers} workers failed: {failure_rows}")
+        merged = RunResult(
+            optimizer="stage_dist", problem=problem.to_json(),
+            budget=budget.to_json(), config=dataclasses.asdict(cfg),
+            obj_idx=tuple(problem.obj_idx), designs=[],
+            objs=np.zeros((0, len(problem.obj_idx))),
+            n_evals=0, n_calls=0, wall_s=0.0, history=np.zeros((0, 4)),
+            extra={"phv": 0.0}, exhausted=True)
+    elif len(results) > 1:
         # The merged set's PHV is recomputed under the problem's own mesh
         # anchor — one coordinator-side evaluation, outside the (fully
         # worker-consumed) search budget.
@@ -130,7 +159,7 @@ def run_dist(problem: NocProblem, budget: Budget, cfg) -> RunResult:
     extra["n_workers"] = int(cfg.n_workers)
     extra["executor"] = cfg.executor
     extra["sync_every"] = int(cfg.sync_every)
-    extra["worker_seeds"] = [s.budget.seed for s in shards]
+    extra["worker_seeds"] = list(worker_seeds)
     extra["worker_failures"] = failure_rows
     extra["pool_rebuilds"] = dist_info.get("pool_rebuilds", 0)
     extra["resumed_from_round"] = dist_info.get("resumed_from_round")
@@ -140,6 +169,9 @@ def run_dist(problem: NocProblem, budget: Budget, cfg) -> RunResult:
         exhausted = True
     if budget.max_calls is not None and merged.n_calls >= budget.max_calls:
         exhausted = True
+    if partial:
+        extra["partial"] = True
+        exhausted = True
 
     return dataclasses.replace(
         merged,
@@ -147,7 +179,7 @@ def run_dist(problem: NocProblem, budget: Budget, cfg) -> RunResult:
         problem=problem.to_json(),
         budget=budget.to_json(),
         config=dataclasses.asdict(cfg),
-        wall_s=time.perf_counter() - t0,
+        wall_s=wall_s,
         extra=extra,
         exhausted=exhausted,
     )

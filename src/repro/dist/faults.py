@@ -45,6 +45,27 @@ Kinds:
     :class:`CoordinatorKilled`, the seam the interrupt/resume
     determinism tests pull.
 
+Service-level kinds (consumed by :mod:`repro.noc.server`, never matched
+against worker dispatches)::
+
+    {"kind": "reject_admission", "tenant": "t0", "request": None}
+    {"kind": "slow_tenant",      "tenant": "t1", "wave": 2, "hang_s": 3.0}
+    {"kind": "kill_server",      "wave": 1}
+
+``reject_admission``
+    Matched at submit time (``tenant``/``request`` — ``None`` matches
+    any): the admission layer returns its structured rejection error,
+    driving the client-visible error path without crafting a malformed
+    problem.
+``slow_tenant``
+    Adds ``hang_s`` to the matched tenant's shard dispatches in wave
+    ``wave`` — a slow tenant exercises per-request deadline degradation
+    and must *not* stall other tenants' rounds.
+``kill_server``
+    Consulted by the service after wave ``wave``'s journal + checkpoints
+    hit disk: raises :class:`ServerKilled`, the seam the service
+    crash-recovery tests pull (mirror of ``kill_coordinator``).
+
 The seeded random mode (``p_crash`` > 0) draws one uniform per
 ``(seed, worker_id, round, attempt)`` position via ``SeedSequence`` —
 deterministic chaos, independent of dispatch order.
@@ -61,6 +82,14 @@ import numpy as np
 
 FAULT_KINDS = ("crash", "abort", "hang", "corrupt", "kill_coordinator")
 
+#: kinds acted out by the service layer (repro.noc.server), not at the
+#: worker boundary — FaultInjector.match() skips them like
+#: kill_coordinator, so a mixed script threads through both layers.
+SERVICE_FAULT_KINDS = ("reject_admission", "slow_tenant", "kill_server")
+
+_WORKER_ONLY_KEYS = {"worker_id", "round", "attempt"}
+_SERVICE_ONLY_KEYS = {"tenant", "request", "wave"}
+
 #: payload returned by a "corrupt" fault — fails any structural
 #: validation (it is not a RunResult / round payload), which is the point.
 CORRUPT_PAYLOAD = {"__corrupt__": "injected payload corruption"}
@@ -76,25 +105,40 @@ class CoordinatorKilled(RuntimeError):
     checkpoint hit disk. Resume with ``StageDistConfig(resume=True)``."""
 
 
+class ServerKilled(RuntimeError):
+    """Raised at a service wave boundary by a ``kill_server`` fault —
+    stands in for the server process dying after the wave's journal and
+    per-request checkpoints hit disk. Restarting the service against the
+    same journal directory resumes every in-flight request."""
+
+
 def check_faults(faults) -> None:
     """Validate a fault list at config construction (not mid-run, after
     evaluation budget has been spent on the rounds before the typo)."""
+    all_kinds = FAULT_KINDS + SERVICE_FAULT_KINDS
     for f in faults or ():
         if not isinstance(f, dict):
             raise ValueError(f"each fault must be a dict, got {type(f).__name__}")
         kind = f.get("kind")
-        if kind not in FAULT_KINDS:
+        if kind not in all_kinds:
             raise ValueError(
-                f"fault kind must be one of {FAULT_KINDS}, got {kind!r}")
-        for key in ("round", "attempt"):
+                f"fault kind must be one of {all_kinds}, got {kind!r}")
+        service = kind in SERVICE_FAULT_KINDS
+        for key in ("round", "attempt", "wave"):
             if int(f.get(key, 0)) < 0:
                 raise ValueError(f"fault {key} must be >= 0, got {f[key]}")
         if f.get("worker_id") is not None and int(f["worker_id"]) < 0:
             raise ValueError(
                 f"fault worker_id must be >= 0 or None, got {f['worker_id']}")
+        for key in ("tenant", "request"):
+            if f.get(key) is not None and not isinstance(f[key], str):
+                raise ValueError(
+                    f"fault {key} must be a string or None, got {f[key]!r}")
         if float(f.get("hang_s", 0.0)) < 0:
             raise ValueError(f"fault hang_s must be >= 0, got {f['hang_s']}")
-        unknown = set(f) - {"kind", "worker_id", "round", "attempt", "hang_s"}
+        allowed = {"kind", "hang_s"} | (
+            _SERVICE_ONLY_KEYS if service else _WORKER_ONLY_KEYS)
+        unknown = set(f) - allowed
         if unknown:
             raise ValueError(f"unknown fault keys {sorted(unknown)} in {f}")
 
@@ -120,7 +164,8 @@ class FaultInjector:
         """First scripted fault targeting this (worker, round, attempt)
         dispatch, or a synthesized crash from the seeded random mode."""
         for f in self.faults:
-            if f["kind"] == "kill_coordinator":
+            if (f["kind"] == "kill_coordinator"
+                    or f["kind"] in SERVICE_FAULT_KINDS):
                 continue
             wid = f.get("worker_id")
             if wid is not None and int(wid) != int(worker_id):
@@ -141,6 +186,48 @@ class FaultInjector:
     def kills_coordinator(self, round_idx: int) -> bool:
         return any(f["kind"] == "kill_coordinator"
                    and int(f.get("round", 0)) == int(round_idx)
+                   for f in self.faults)
+
+    # --------------------------------------------------- service matching
+    def _match_service(self, kind: str, tenant: str,
+                       request: str) -> dict | None:
+        for f in self.faults:
+            if f["kind"] != kind:
+                continue
+            if f.get("tenant") is not None and f["tenant"] != str(tenant):
+                continue
+            if f.get("request") is not None and f["request"] != str(request):
+                continue
+            return f
+        return None
+
+    def rejects_admission(self, tenant: str, request: str) -> dict | None:
+        """Scripted ``reject_admission`` targeting this submit (``tenant``
+        / ``request`` keys, ``None`` = any), consulted by the service's
+        admission layer before validation."""
+        return self._match_service("reject_admission", tenant, request)
+
+    def slow_tenant_delay(self, tenant: str, request: str,
+                          wave: int) -> float:
+        """Seconds of injected per-dispatch delay for this tenant's
+        shards in service wave ``wave`` (0.0 when unmatched)."""
+        for f in self.faults:
+            if f["kind"] != "slow_tenant":
+                continue
+            if f.get("tenant") is not None and f["tenant"] != str(tenant):
+                continue
+            if f.get("request") is not None and f["request"] != str(request):
+                continue
+            if int(f.get("wave", 0)) != int(wave):
+                continue
+            return float(f.get("hang_s", 0.0))
+        return 0.0
+
+    def kills_server(self, wave: int) -> bool:
+        """True when a ``kill_server`` fault targets service wave
+        ``wave`` — consulted after the wave's journal/checkpoints save."""
+        return any(f["kind"] == "kill_server"
+                   and int(f.get("wave", 0)) == int(wave)
                    for f in self.faults)
 
 

@@ -36,6 +36,13 @@ a fresh per-round evaluator (process workers cannot carry evaluator
 state between rounds), so each round's mesh-anchor evaluation is paid
 inside its slice, like any other evaluation.
 
+All of the per-round planning/pooling state lives in
+:class:`repro.dist.state.SyncRunState` (build_round / absorb_round /
+snapshot / restore) — :func:`run_synced` is the single-machine driver of
+that protocol, and :mod:`repro.noc.server` drives many machines over one
+shared fleet. The refactor is behavior-preserving: the PR 5/6
+determinism and interrupt/resume pins hold bit-for-bit.
+
 Resilience (DESIGN.md §9): dispatches carry per-shard deadlines and
 bounded reseeded retries (``cfg.shard_timeout_s`` / ``max_retries`` /
 ``retry_backoff_s`` threaded into :func:`repro.dist.worker.
@@ -52,38 +59,16 @@ resumed run is byte-identical to the uninterrupted one. Scripted faults
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.local_search import ParetoSet
-from repro.noc.api import Budget, NocProblem, RunResult, design_to_json
+from repro.noc.api import Budget, NocProblem, RunResult
 
 from .ckpt import RoundCheckpointer
 from .faults import CoordinatorKilled, FaultInjector
-from .plan import plan_shards, retry_seed, round_seed, split_evenly
+# Re-exported for back-compat: these lived here before the state-machine
+# extraction and are part of the module's public surface.
+from .state import (ROUND_TAG_STRIDE, TRAJECTORY_FIELDS,  # noqa: F401
+                    SyncRunState, n_rounds, reseed_round_args)
 
-#: history tags are ``worker_id * ROUND_TAG_STRIDE + round`` — unique per
-#: (worker, round) and worker-major when sorted. Also the hard cap on
-#: rounds (unreachable in practice: every dispatched round costs >= 1
-#: evaluation, so rounds are bounded by the eval budget long before it).
-ROUND_TAG_STRIDE = 100_000
-
-#: config fields that shape the search trajectory — the run identity a
-#: resume must match. Deliberately excludes the knobs that may legally
-#: differ between the interrupted and the resuming invocation: executor
-#: (where shards run, not what they compute), fault scripts (the resume
-#: drops the kill), timeout/retry tuning, and checkpoint_dir/resume
-#: themselves.
-TRAJECTORY_FIELDS = ("n_workers", "sync_every", "iters_max", "n_starts",
-                     "n_swaps", "n_link_moves", "max_local_steps",
-                     "forest_kwargs", "forest_backend")
-
-
-def n_rounds(iters_max: int, sync_every: int) -> int:
-    """Planned sync rounds: ceil(iters_max / sync_every). Extra
-    budget-draining rounds may follow (see the module docstring)."""
-    if sync_every < 1:
-        raise ValueError(f"sync_every must be >= 1, got {sync_every}")
-    return -(-iters_max // sync_every)
+_reseed_round_args = reseed_round_args  # legacy private alias
 
 
 def validate_round_payload(payload) -> None:
@@ -102,14 +87,6 @@ def validate_round_payload(payload) -> None:
         raise ValueError("round payload 'result' is not a RunResult JSON")
 
 
-def _reseed_round_args(orig_args: tuple, attempt: int) -> tuple:
-    """Retry dispatch for attempt ``attempt``: same shard, fresh
-    trajectory — only the seed (arg 2, which ``run_shard_round`` folds
-    into the budget) changes, via :func:`repro.dist.plan.retry_seed`."""
-    return (orig_args[:2] + (retry_seed(orig_args[2], attempt),)
-            + orig_args[3:])
-
-
 def run_synced(problem: NocProblem, budget: Budget, cfg,
                ) -> tuple[list[RunResult], list[dict], dict]:
     """Execute the round-based synced run; returns ``(results, failures,
@@ -125,24 +102,7 @@ def run_synced(problem: NocProblem, budget: Budget, cfg,
     registry at module scope)."""
     from . import worker as _worker
 
-    R = n_rounds(cfg.iters_max, cfg.sync_every)
-    shards = plan_shards(problem, budget, cfg.n_workers)
-    round_evals = {s.worker_id: split_evenly(s.budget.max_evals, R)
-                   for s in shards}
-    round_calls = {s.worker_id: split_evenly(s.budget.max_calls, R)
-                   for s in shards}
-    shard_budget = {s.worker_id: s.budget for s in shards}
-    spent_evals = {s.worker_id: 0 for s in shards}
-    spent_calls = {s.worker_id: 0 for s in shards}
-    stage_cfg = {
-        "n_starts": cfg.n_starts, "n_swaps": cfg.n_swaps,
-        "n_link_moves": cfg.n_link_moves,
-        "max_local_steps": cfg.max_local_steps,
-        "forest_kwargs": cfg.forest_kwargs,
-        "forest_backend": cfg.forest_backend,
-    }
-    problem_json = problem.to_json()
-    plan_id = {f: getattr(cfg, f) for f in TRAJECTORY_FIELDS}
+    sm = SyncRunState(problem, budget, cfg)
 
     faults = tuple(getattr(cfg, "faults", ()) or ())
     injector = FaultInjector(faults=faults) if faults else None
@@ -150,196 +110,18 @@ def run_synced(problem: NocProblem, budget: Budget, cfg,
     max_retries = int(getattr(cfg, "max_retries", 0) or 0)
     backoff_s = float(getattr(cfg, "retry_backoff_s", 0.0) or 0.0)
 
-    pooled_x: list[list[float]] = []
-    pooled_y: list[float] = []
-    # The pooled front: the Pareto union of everything any worker found
-    # so far, fed back as each next round's global_init.
-    pooled_front: dict | None = None
-    # Round-0 starts mirror stage_batch's chain diversification across
-    # the whole fleet: global chain j (worker i, chain k) starts from the
-    # mesh perturbed by 2·j random moves, drawn from the root seed.
-    # Without this every worker's chain 0 would re-explore the mesh basin
-    # W times over — exactly the duplicated work sharding must avoid.
-    from repro.core.problem import sample_neighbors
-
-    start_rng = np.random.default_rng(budget.seed)
-    base = problem.mesh()
-    starts_by_wid: dict[int, list[dict] | None] = {}
-    for s in shards:
-        chain_starts = []
-        for k in range(cfg.n_starts):
-            j = s.worker_id * cfg.n_starts + k
-            d = base
-            for _ in range(2 * j):
-                nb = sample_neighbors(problem.spec, d, start_rng, 1, 1)
-                if nb:
-                    d = nb[int(start_rng.integers(len(nb)))]
-            chain_starts.append(design_to_json(d))
-        starts_by_wid[s.worker_id] = chain_starts
-    alive = [s.worker_id for s in shards]
-    results: list[RunResult] = []
-    failures: list[dict] = []
-
     # ------------------------------------------------------ checkpointing
     ckpt: RoundCheckpointer | None = None
-    resumed_from: int | None = None
-    start_round = 0
-    restored_done = False
     if getattr(cfg, "checkpoint_dir", None):
         ckpt = RoundCheckpointer(cfg.checkpoint_dir)
         if getattr(cfg, "resume", False):
-            state = ckpt.load_round()
-            if (state["problem"] != problem_json
-                    or state["budget"] != budget.to_json()
-                    or state["plan"] != plan_id):
+            try:
+                sm.restore(ckpt.load_round())
+            except ValueError as exc:
                 raise ValueError(
-                    f"checkpoint in {cfg.checkpoint_dir!r} belongs to a "
-                    "different run (problem/budget/trajectory-config "
-                    "mismatch); refusing to resume")
-            alive = [int(w) for w in state["alive"]]
-            spent_evals = {int(w): int(v)
-                           for w, v in state["spent_evals"].items()}
-            spent_calls = {int(w): int(v)
-                           for w, v in state["spent_calls"].items()}
-            starts_by_wid = {int(w): v
-                             for w, v in state["starts_by_wid"].items()}
-            pooled_x = state["pooled_x"]
-            pooled_y = state["pooled_y"]
-            pooled_front = state["pooled_front"]
-            results = [RunResult.from_json(j) for j in state["results"]]
-            failures = list(state["failures"])
-            resumed_from = int(state["round"])
-            start_round = resumed_from + 1
-            restored_done = bool(state.get("done", False))
+                    f"checkpoint in {cfg.checkpoint_dir!r}: {exc}") from exc
 
-    def _snapshot(done: bool) -> dict:
-        """Complete coordinator state after a round — everything
-        :func:`run_synced` mutates, plus the run identity. ``done``
-        records whether the run had decided to stop (a resume must not
-        dispatch extra rounds the uninterrupted run would not have)."""
-        return {
-            "problem": problem_json,
-            "budget": budget.to_json(),
-            "plan": plan_id,
-            "done": bool(done),
-            "alive": list(alive),
-            "spent_evals": {str(w): v for w, v in spent_evals.items()},
-            "spent_calls": {str(w): v for w, v in spent_calls.items()},
-            "starts_by_wid": {str(w): v for w, v in starts_by_wid.items()},
-            "pooled_x": pooled_x,
-            "pooled_y": pooled_y,
-            "pooled_front": pooled_front,
-            "results": [rr.to_json() for rr in results],
-            "failures": failures,
-        }
-
-    def _room(wid: int, r: int) -> tuple[int | None, int | None]:
-        """Cumulative remaining (evals, calls) for worker ``wid`` at
-        round ``r``; extra rounds (r >= R) draw on the full shard."""
-        def one(slices, spent, total):
-            if total is None:
-                return None
-            cum = total if r >= R else sum(slices[wid][:r + 1])
-            return max(0, cum - spent[wid])
-        return (one(round_evals, spent_evals, shard_budget[wid].max_evals),
-                one(round_calls, spent_calls, shard_budget[wid].max_calls))
-
-    def _one_round(r: int, pool) -> bool:
-        """Dispatch round ``r``; returns False when the run is done."""
-        nonlocal alive, pooled_front
-        planned = r < R
-        if not planned and budget.max_evals is None:
-            return False  # extra rounds only drain a finite eval budget
-        iters_r = (min(cfg.sync_every, cfg.iters_max - r * cfg.sync_every)
-                   if planned else cfg.sync_every)
-        tasks = []
-        dispatched = []
-        round_cfg = dict(stage_cfg, iters_max=iters_r)
-        for wid in alive:
-            evals_r, calls_r = _room(wid, r)
-            if evals_r == 0 or calls_r == 0:
-                continue  # budget fully consumed by earlier rounds
-            b = Budget(max_evals=evals_r, max_calls=calls_r,
-                       seed=round_seed(shard_budget[wid].seed, r))
-            starts = starts_by_wid[wid]
-            if not planned and pooled_front and pooled_front["designs"]:
-                # Extra rounds intensify: restart every chain from an
-                # elite of the pooled front (cycled across workers and
-                # rounds for coverage) instead of the meta/random restarts
-                # the worker checkpointed — late budget is better spent
-                # polishing the union front than opening new basins, which
-                # is exactly where the single-process driver's chains sit
-                # by this point of a run.
-                elite = pooled_front["designs"]
-                starts = [elite[(wid + k * cfg.n_workers + (r - R))
-                                % len(elite)]
-                          for k in range(cfg.n_starts)]
-            dispatched.append(wid)
-            tasks.append((
-                problem_json, b.to_json(), b.seed,
-                round_cfg,
-                wid * ROUND_TAG_STRIDE + r,        # unique history tag
-                starts,
-                pooled_x or None, pooled_y or None,
-                pooled_front,
-            ))
-        if not dispatched:
-            # Planned round with every alive worker's cumulative slice
-            # already overspent (one big dispatch can overshoot a small
-            # slice): skip forward — later rounds' larger cumulative
-            # targets reopen room. In extra rounds room IS the whole
-            # remaining shard, so nobody-dispatchable means truly done.
-            return planned
-        round_results, round_failures = _worker.execute_shards(
-            _worker.run_shard_round, tasks, cfg.executor, pool=pool,
-            meta=[(wid, r) for wid in dispatched],
-            timeout_s=timeout_s, max_retries=max_retries,
-            backoff_s=backoff_s, retry_args=_reseed_round_args,
-            injector=injector, validate=validate_round_payload)
-
-        # Every failed attempt is reported; a worker is dropped only if
-        # it exhausted its attempts (index absent from round_results).
-        dropped = []
-        for idx in sorted(round_failures):
-            failures.extend(round_failures[idx])
-            if idx not in round_results:
-                dropped.append(dispatched[idx])
-        # Pool in sorted (worker) order — the shared training set and
-        # front must be independent of worker completion order for the
-        # next round to be deterministic.
-        round_spent = 0
-        for idx in sorted(round_results):
-            wid = dispatched[idx]
-            payload = round_results[idx]
-            rr = RunResult.from_json(payload["result"])
-            spent_evals[wid] += int(rr.n_evals)
-            spent_calls[wid] += int(rr.n_calls)
-            round_spent += int(rr.n_evals)
-            results.append(rr)
-            pooled_x.extend(payload["x_train"])
-            pooled_y.extend(payload["y_train"])
-            if payload["next_starts"]:
-                starts_by_wid[wid] = payload["next_starts"]
-        alive = [w for w in alive if w not in dropped]
-        # Refresh the pooled front from every surviving result so far
-        # (workers echo the injected front back inside their global sets,
-        # so rebuilding from scratch is a pure union, no double counting).
-        front = ParetoSet.empty()
-        for rr in results:
-            front = front.merged_with(list(rr.designs),
-                                      np.asarray(rr.objs, dtype=np.float64),
-                                      rr.obj_idx)
-        pooled_front = {
-            "designs": [design_to_json(d) for d in front.designs],
-            "objs": np.asarray(front.objs, dtype=np.float64).tolist(),
-        }
-        # An unplanned round that spent only its mesh anchors made no
-        # search progress — further rounds would loop on anchors forever.
-        if not planned and round_spent <= len(dispatched):
-            return False
-        return True
-
-    info: dict = {"pool_rebuilds": 0, "resumed_from_round": resumed_from,
+    info: dict = {"pool_rebuilds": 0, "resumed_from_round": sm.resumed_from,
                   "checkpoint": None}
 
     # One pool for every round: spawn children pay their interpreter +
@@ -347,11 +129,26 @@ def run_synced(problem: NocProblem, budget: Budget, cfg,
     # execute_shards, charging the in-flight shards a retry.
     with _worker.shard_pool(cfg.executor, cfg.n_workers) as pool:
         try:
-            r = start_round
-            while not restored_done and alive and r < ROUND_TAG_STRIDE:
-                cont = _one_round(r, pool)
+            while not sm.done:
+                r = sm.next_round
+                built = sm.build_round(r)
+                if built is None:
+                    cont = False          # the round decided: run over
+                elif not built[0]:
+                    cont = sm.skip_round(r)
+                else:
+                    tasks, dispatched = built
+                    round_results, round_failures = _worker.execute_shards(
+                        _worker.run_shard_round, tasks, cfg.executor,
+                        pool=pool,
+                        meta=[(wid, r) for wid in dispatched],
+                        timeout_s=timeout_s, max_retries=max_retries,
+                        backoff_s=backoff_s, retry_args=reseed_round_args,
+                        injector=injector, validate=validate_round_payload)
+                    cont = sm.absorb_round(r, dispatched, round_results,
+                                           round_failures)
                 if ckpt is not None:
-                    ckpt.save_round(r, _snapshot(done=not cont))
+                    ckpt.save_round(r, sm.snapshot(done=not cont))
                 if injector is not None and injector.kills_coordinator(r):
                     saved = "saved" if ckpt is not None else "NOT saved"
                     raise CoordinatorKilled(
@@ -359,7 +156,6 @@ def run_synced(problem: NocProblem, budget: Budget, cfg,
                         f"(checkpoint {saved})")
                 if not cont:
                     break
-                r += 1
         finally:
             if isinstance(pool, _worker.ShardPool):
                 info["pool_rebuilds"] = pool.rebuilds
@@ -368,4 +164,4 @@ def run_synced(problem: NocProblem, budget: Budget, cfg,
                               "save_s": ckpt.save_s,
                               "rounds_on_disk": ckpt.rounds()}
 
-    return results, failures, info
+    return sm.results, sm.failures, info

@@ -35,6 +35,7 @@ too — the resilience contract is DESIGN.md §9.
 from __future__ import annotations
 
 import contextlib
+import contextvars
 import dataclasses
 import multiprocessing
 import time
@@ -45,6 +46,73 @@ from repro.dist.faults import call_with_faults
 from repro.noc.api import Budget, NocProblem, RunResult
 
 EXECUTORS = ("serial", "process", "jax")
+
+
+# --------------------------------------------------------------------------
+# Cooperative in-process deadlines
+# --------------------------------------------------------------------------
+class ShardDeadlineExceeded(RuntimeError):
+    """A shard tripped its cooperative deadline mid-search (serial/jax).
+
+    In-process executors cannot preempt their own frame the way the
+    process executor's ``fut.result(timeout=...)`` + pool-kill can, so
+    the deadline is enforced *cooperatively*: :func:`_execute_inline`
+    arms a monotonic deadline in :data:`_DEADLINE` before dispatching,
+    and the worker wraps its evaluator in :class:`_DeadlineGuard`, which
+    raises this before every evaluation batch once the deadline passes.
+    Every search driver funnels all evaluation through
+    ``Evaluator.batch_aux``, so overrun is bounded by a single batch
+    instead of the rest of the round.
+    """
+
+
+_DEADLINE: contextvars.ContextVar[float | None] = contextvars.ContextVar(
+    "repro_dist_shard_deadline", default=None)
+
+
+class _DeadlineGuard:
+    """Evaluator proxy that trips :class:`ShardDeadlineExceeded` once the
+    armed deadline passes. Mirrors the Evaluator surface the same way
+    :class:`repro.noc.api.BudgetedEvaluator` does — everything funnels
+    through ``batch_aux``; reads (``n_evals``/``n_calls``/...) delegate
+    untouched, so wrapping never changes a run that meets its deadline."""
+
+    def __init__(self, ev, deadline: float):
+        self._ev = ev
+        self._deadline = deadline
+
+    def _check(self) -> None:
+        now = time.monotonic()
+        if now > self._deadline:
+            raise ShardDeadlineExceeded(
+                f"cooperative deadline exceeded {now - self._deadline:.3f}s "
+                "before an evaluation batch (in-process executors check the "
+                "shard deadline between evaluator dispatches)")
+
+    def batch_aux(self, designs):
+        if designs:
+            self._check()
+        return self._ev.batch_aux(designs)
+
+    def batch(self, designs):
+        return self.batch_aux(designs)[0]
+
+    def __call__(self, d):
+        return self.batch([d])[0]
+
+    def edp(self, d):
+        self._check()
+        return self._ev.edp(d)
+
+    def __getattr__(self, name: str):
+        return getattr(self._ev, name)
+
+
+def deadline_wrap(ev):
+    """Wrap ``ev`` in a :class:`_DeadlineGuard` when a cooperative
+    deadline is armed for this dispatch; identity otherwise."""
+    deadline = _DEADLINE.get()
+    return ev if deadline is None else _DeadlineGuard(ev, deadline)
 
 
 def check_executor(executor: str) -> None:
@@ -73,7 +141,13 @@ def run_shard(problem_json: dict, budget_json: dict, seed: int,
     problem = NocProblem.from_json(problem_json)
     budget = dataclasses.replace(Budget.from_json(budget_json),
                                  seed=int(seed))
-    res = run(problem, "stage_batch", budget=budget, config=config_json)
+    # With a cooperative deadline armed, inject a guarded copy of the
+    # evaluator api.run would have built itself — same fresh evaluator,
+    # every dispatch now also checks the shard deadline.
+    ev = (deadline_wrap(problem.evaluator())
+          if _DEADLINE.get() is not None else None)
+    res = run(problem, "stage_batch", budget=budget, config=config_json,
+              ev=ev)
     res.extra["worker_id"] = int(worker_id)
     return res.to_json()
 
@@ -130,7 +204,7 @@ def run_shard_round(problem_json: dict, budget_json: dict, seed: int,
     # the round's (unfinished) search — the coordinator keeps earlier
     # rounds and flags the merged run exhausted.
     ev = problem.evaluator()
-    guarded = BudgetedEvaluator(ev, budget)
+    guarded = BudgetedEvaluator(deadline_wrap(ev), budget)
     res: StageBatchResult | None = None
     ctx = history = None
     try:
@@ -207,7 +281,8 @@ def validate_result_payload(payload) -> None:
 # Executors
 # --------------------------------------------------------------------------
 class _ShardTimeout(RuntimeError):
-    """An in-process shard overran its deadline (detected post-hoc)."""
+    """An in-process shard overran its deadline between cooperative
+    checks (post-hoc backstop — see :class:`ShardDeadlineExceeded`)."""
 
 
 class _ValidationFailed(RuntimeError):
@@ -347,11 +422,14 @@ def execute_shards(fn, arg_tuples: list[tuple], executor: str = "serial",
         Per-shard wall-clock deadline. Under ``process`` it is enforced
         *preemptively* — ``fut.result(timeout=...)`` measured from wave
         dispatch, and a trip kills + rebuilds the pool (the hung child
-        holds a slot; there is no gentler eviction). In-process executors
-        cannot preempt their own frame, so ``serial``/``jax`` check the
-        deadline *post-hoc*: an overrunning shard is charged a
-        ``"timeout"`` failure and its payload discarded, but it runs to
-        completion first (documented contract, DESIGN.md §9).
+        holds a slot; there is no gentler eviction). ``serial``/``jax``
+        cannot preempt their own frame, so they enforce the deadline
+        *cooperatively*: the armed :data:`_DEADLINE` makes the worker's
+        evaluator raise :class:`ShardDeadlineExceeded` before the first
+        evaluation batch past the deadline — overrun is bounded by one
+        batch, not the rest of the shard — with a post-hoc elapsed check
+        as backstop for overruns between evaluator dispatches. Either
+        trip is charged as a ``"timeout"`` failure (DESIGN.md §9).
     ``max_retries`` / ``backoff_s``
         Up to ``max_retries`` re-dispatches per shard, sleeping
         ``backoff_s * 2**(attempt-1)`` before attempt ``attempt``.
@@ -408,6 +486,8 @@ def _execute_inline(fn, arg_tuples, executor, meta, timeout_s, max_retries,
                 if retry_args is not None:
                     args = retry_args(orig_args, attempt)
             t0 = time.monotonic()
+            token = (_DEADLINE.set(t0 + timeout_s)
+                     if timeout_s is not None else None)
             try:
                 if executor == "jax":
                     with jax.default_device(devices[i % len(devices)]):
@@ -418,18 +498,25 @@ def _execute_inline(fn, arg_tuples, executor, meta, timeout_s, max_retries,
                         injector, wid, rnd, attempt, fn, args)
                 elapsed = time.monotonic() - t0
                 if timeout_s is not None and elapsed > timeout_s:
+                    # Backstop for shards that overran between evaluator
+                    # dispatches (e.g. the final surrogate refit): the
+                    # cooperative guard can only fire at an evaluation.
                     raise _ShardTimeout(
                         f"shard ran {elapsed:.3f}s, deadline {timeout_s}s "
-                        "(in-process deadlines are post-hoc: the shard ran "
-                        "to completion but its payload is discarded)")
+                        "(post-hoc backstop: the overrun fell between "
+                        "cooperative deadline checks)")
                 results[i] = _run_validated(payload, validate)
                 break
             except Exception as exc:  # noqa: BLE001 — fault isolation
-                phase = ("timeout" if isinstance(exc, _ShardTimeout)
+                phase = ("timeout" if isinstance(
+                             exc, (_ShardTimeout, ShardDeadlineExceeded))
                          else "validate" if isinstance(exc, _ValidationFailed)
                          else "run")
                 _record_failure(failures, i,
                                 _failure_record(wid, rnd, attempt, phase, exc))
+            finally:
+                if token is not None:
+                    _DEADLINE.reset(token)
     return results, failures
 
 

@@ -183,6 +183,23 @@ def cmd_agnostic(args) -> int:
     return 0
 
 
+def cmd_serve(args) -> int:
+    import json as _json
+
+    from .server import NocService, ServiceConfig, serve_stdio
+
+    faults = tuple(_json.loads(args.faults)) if args.faults else ()
+    cfg = ServiceConfig(
+        n_workers=args.workers, executor=args.executor,
+        journal_dir=args.journal_dir, max_queue=args.max_queue,
+        max_inflight_per_tenant=args.tenant_cap,
+        shard_timeout_s=args.shard_timeout, max_retries=args.max_retries,
+        retry_backoff_s=args.retry_backoff, cache=not args.no_cache,
+        keep_completed=args.keep_completed, faults=faults)
+    serve_stdio(NocService(cfg))
+    return 0
+
+
 # --------------------------------------------------------------------------
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
@@ -237,6 +254,36 @@ def main(argv: list[str] | None = None) -> int:
     ap_ag.add_argument("--local-steps", type=int, default=12)
     ap_ag.add_argument("--seed", type=int, default=0)
     ap_ag.set_defaults(fn=cmd_agnostic)
+
+    ap_srv = sub.add_parser(
+        "serve",
+        help="multi-tenant optimization service (stdio JSON lines; "
+             "DESIGN.md §10)")
+    ap_srv.add_argument("--journal-dir", default=None,
+                        help="crash-safe request journal directory; "
+                             "restarting against it resumes in-flight "
+                             "requests (omit = no persistence)")
+    ap_srv.add_argument("--workers", type=int, default=4,
+                        help="shared fleet size (default 4)")
+    ap_srv.add_argument("--executor", default="serial",
+                        help="serial|process|jax (default serial)")
+    ap_srv.add_argument("--max-queue", type=int, default=16,
+                        help="bound on live requests (backpressure)")
+    ap_srv.add_argument("--tenant-cap", type=int, default=2,
+                        help="per-tenant in-flight request cap")
+    ap_srv.add_argument("--shard-timeout", type=float, default=None,
+                        help="per-shard wall deadline, seconds")
+    ap_srv.add_argument("--max-retries", type=int, default=1)
+    ap_srv.add_argument("--retry-backoff", type=float, default=0.0)
+    ap_srv.add_argument("--no-cache", action="store_true",
+                        help="disable the canonical-key result cache")
+    ap_srv.add_argument("--keep-completed", type=int, default=4,
+                        help="completed requests whose round checkpoints "
+                             "are kept (older ones gc'd)")
+    ap_srv.add_argument("--faults", default=None,
+                        help="JSON fault script (chaos drills; see "
+                             "repro.dist.faults)")
+    ap_srv.set_defaults(fn=cmd_serve)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -165,6 +165,52 @@ def test_failure_records_carry_traceback_not_just_message():
     assert 'raise KeyError("the-inner-detail")' in rec["traceback"]
 
 
+@pytest.mark.parametrize("executor", ["serial", "jax"])
+def test_inline_hang_trips_cooperative_deadline(executor):
+    """Regression: serial/jax enforce shard_timeout_s *preemptively*.
+
+    The injected hang burns the whole deadline before the shard's search
+    starts, so a post-hoc-only check (the old contract) would let the
+    shard run its full budget to completion and only then discard the
+    payload. The cooperative guard instead aborts at the first evaluator
+    dispatch past the deadline — pinned by the distinct error text."""
+    from repro.core import spec_tiny
+    from repro.dist.worker import run_shard
+    from repro.noc import Budget, NocProblem
+
+    problem = NocProblem(spec=spec_tiny(), traffic="BFS", case="case3")
+    inj = FaultInjector(faults=(
+        {"kind": "hang", "round": 0, "attempt": 0, "hang_s": 0.4},))
+    results, failures = execute_shards(
+        run_shard,
+        [(problem.to_json(), Budget(max_evals=200, seed=0).to_json(), 0)],
+        executor, timeout_s=0.2, injector=inj)
+    assert results == {}
+    [rec] = failures[0]
+    assert rec["phase"] == "timeout"
+    assert "cooperative deadline exceeded" in rec["error"]
+    assert "ShardDeadlineExceeded" in rec["traceback"]
+
+
+def test_deadline_guard_is_inert_without_overrun():
+    """A met deadline never perturbs the run: identical payloads with
+    and without a (generous) cooperative deadline armed, up to wall
+    clocks (wall_s and the history timestamp column)."""
+    from repro.core import spec_tiny
+    from repro.dist.worker import run_shard
+    from repro.noc import Budget, NocProblem
+
+    problem = NocProblem(spec=spec_tiny(), traffic="BFS", case="case3")
+    task = [(problem.to_json(), Budget(max_evals=60, seed=2).to_json(), 2)]
+    plain, f0 = execute_shards(run_shard, task, "serial")
+    timed, f1 = execute_shards(run_shard, task, "serial", timeout_s=600.0)
+    assert f0 == {} and f1 == {}
+    for res in (plain, timed):
+        res[0]["wall_s"] = 0.0
+        res[0]["history"] = [row[1:] for row in res[0]["history"]]
+    assert plain == timed
+
+
 # ---------------------------------------------------------------------------
 # execute_shards: process executor — real aborts, preemptive deadlines
 # ---------------------------------------------------------------------------
