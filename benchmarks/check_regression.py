@@ -45,6 +45,8 @@ TRACKED = (
     "stage_dist_ckpt_4w_us",
     "serve_submit_overhead_us",
     "serve_8req_4w_us",
+    "traffic_model_gen_us",
+    "agnostic_llm_cross_us",
 )
 
 

@@ -1,9 +1,14 @@
-"""Figs. 9 & 11 — application-agnostic NoC design.
+"""Figs. 9 & 11 — application-agnostic NoC design, paper apps and beyond.
 
 Every application's NoC is cross-evaluated on every other application and
 on the leave-one-out AVG NoC; normalized EDP degradation is the paper's
 headline number (64-tile: 3.2% avg single-app, 1.1% AVG; 36-tile: 3.8% /
 1.8%; Fig. 11 repeats this under joint perf-thermal objectives).
+
+``--workloads llm`` runs the study the paper could not: paper apps and
+model-derived LLM phase traffic (repro.workloads, DESIGN.md §11)
+cross-executed against each other, reporting how far a paper-apps-AVG NoC
+degrades on LLM traffic and vice versa.
 
 The per-application optimizations route through the unified ``repro.noc``
 API (``optimize_for_traffic`` is a thin wrapper over the "stage" registry
@@ -19,7 +24,9 @@ from repro.noc import OptimizeBudget, run_agnostic_study, summarize
 from .common import Timer, row
 
 
-def main(reduced: bool = False) -> None:
+def main(reduced: bool = False, workloads: str = "paper") -> None:
+    if workloads == "llm":
+        return main_llm(reduced)
     spec = spec_16() if reduced else spec_36()
     apps = APP_NAMES[:4] if reduced else APP_NAMES
     budget = OptimizeBudget(
@@ -38,5 +45,37 @@ def main(reduced: bool = False) -> None:
             f"avg_noc_worst={s['avg_noc_worst']*100:.1f}%")
 
 
+def main_llm(reduced: bool = False) -> None:
+    from repro.workloads import (LLM_STUDY_SCENARIOS, format_cross_table,
+                                 run_cross_workload_study)
+
+    spec = spec_16() if reduced else spec_36()
+    paper_apps = APP_NAMES[:2] if reduced else APP_NAMES[:4]
+    scenarios = (LLM_STUDY_SCENARIOS[::2] if reduced
+                 else LLM_STUDY_SCENARIOS)
+    budget = OptimizeBudget(
+        iters_max=2 if reduced else 4,
+        n_swaps=10, n_link_moves=10,
+        max_local_steps=12 if reduced else 40,
+    )
+    with Timer() as t:
+        res = run_cross_workload_study(spec, paper_apps, scenarios,
+                                       "case3", budget)
+    print(format_cross_table(res))
+    s = res["summary"]
+    n_workloads = len(paper_apps) + len(scenarios)
+    row("fig9_llm_cross", t.dt / n_workloads * 1e6,
+        f"paper_on_llm_avg=+{s['paper_on_llm_avg']*100:.1f}%;"
+        f"paper_on_llm_worst=+{s['paper_on_llm_worst']*100:.1f}%;"
+        f"llm_on_paper_avg=+{s['llm_on_paper_avg']*100:.1f}%;"
+        f"paper_on_paper_avg=+{s['paper_on_paper_avg']*100:.1f}%")
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--workloads", default="paper", choices=("paper", "llm"))
+    a = ap.parse_args()
+    main(reduced=a.reduced, workloads=a.workloads)

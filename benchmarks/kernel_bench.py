@@ -244,6 +244,44 @@ def main(reduced: bool = False) -> None:
         f"requests=8;serial_fleet;done={n_done}")
     bench["serve_8req_4w_us"] = t.dt * 1e6
 
+    # Model-derived traffic generation (repro.workloads, DESIGN.md §11):
+    # matrix synthesis is pure numpy flow accounting and must stay cheap
+    # enough to build scenarios on the fly at admission time.
+    from repro.workloads import LLM_STUDY_SCENARIOS, parse_scenario, \
+        scenario_matrix
+
+    gen_spec = spec_64()
+    scen = [parse_scenario(s) for s in LLM_STUDY_SCENARIOS]
+
+    def gen_all():
+        for arch, phase in scen:
+            scenario_matrix(gen_spec, arch, phase)
+
+    gen_all()  # warm (model-config imports)
+    t_gen = _min_of(gen_all)
+    row("traffic_model_gen", t_gen / len(scen) * 1e6,
+        f"scenarios={len(scen)};spec=64;per_matrix")
+    bench["traffic_model_gen_us"] = t_gen / len(scen) * 1e6
+
+    # Reduced cross-execution cell of the LLM agnostic study: 2 paper apps
+    # x 2 LLM scenarios + 2 AVG rows on spec_tiny — tracks the end-to-end
+    # optimize+cross-evaluate path the fig9 --workloads llm study scales up.
+    from repro.core.agnostic import OptimizeBudget
+    from repro.workloads import run_cross_workload_study
+
+    cross_budget = OptimizeBudget(iters_max=1, n_swaps=4, n_link_moves=4,
+                                  max_local_steps=6)
+    with Timer() as t:
+        cross = run_cross_workload_study(
+            spec_tiny(), ("BFS", "BP"),
+            ("yi-6b:train.fwd", "qwen3-moe-30b-a3b:serve.decode"),
+            "case3", cross_budget)
+    s = cross["summary"]
+    row("agnostic_llm_cross", t.dt * 1e6,
+        f"paper_on_llm_avg=+{s['paper_on_llm_avg']*100:.1f}%;"
+        f"llm_on_paper_avg=+{s['llm_on_paper_avg']*100:.1f}%;tiny")
+    bench["agnostic_llm_cross_us"] = t.dt * 1e6
+
     out = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                        "BENCH_netsim.json")
     with open(out, "w") as fh:

@@ -8,21 +8,64 @@ optimization is a registry run of "stage"); the equivalent CLI is
     PYTHONPATH=src python -m repro.noc agnostic --spec 16 --apps BFS,BP,...
 
     PYTHONPATH=src python examples/agnostic_noc.py [--full]
+
+``--llm`` asks the question the paper could not: does the agnostic claim
+survive LLM-era traffic? Paper apps and model-derived phase scenarios
+(repro.workloads, DESIGN.md §11) are cross-executed against each other,
+and one design is scored over a whole serving trace (phase-weighted EDP +
+per-link utilization via the link-util kernel path).
 """
 
 import argparse
 
 import numpy as np
 
-from repro.core import APP_NAMES, spec_16, spec_36
+from repro.core import APP_NAMES, spec_16, spec_36, spec_tiny
 from repro.noc import OptimizeBudget, run_agnostic_study, summarize
+
+
+def main_llm():
+    from repro.workloads import (format_cross_table, phase_weighted_edp,
+                                 run_cross_workload_study, trace_for,
+                                 trace_link_report)
+
+    spec = spec_tiny()
+    scenarios = ("yi-6b:train.fwd", "qwen3-moe-30b-a3b:train.fwd",
+                 "qwen3-moe-30b-a3b:serve.decode")
+    budget = OptimizeBudget(iters_max=2, n_swaps=6, n_link_moves=6,
+                            max_local_steps=10)
+    res = run_cross_workload_study(spec, ("BFS", "BP"), scenarios,
+                                   "case3", budget)
+    print("normalized EDP (row: NoC optimized for; col: workload executed):")
+    print(format_cross_table(res))
+
+    # Score the paper-apps-AVG NoC over the whole MoE serving trace and
+    # show where its traffic concentrates (phases + link-util kernel path).
+    d = res["designs"]["AVG:paper"]
+    trace = trace_for("qwen3-moe-30b-a3b", "serving")
+    pw = phase_weighted_edp(spec, d, trace)
+    rep = trace_link_report(spec, d, trace)
+    print()
+    print("AVG:paper NoC on the qwen3-moe serving trace:")
+    for name, e in pw["per_phase"].items():
+        print(f"  {name:>15s}  edp={e:.4g}  (weight {pw['weights'][name]:g})")
+    print(f"  phase-weighted edp={pw['edp']:.4g}")
+    (a, b), peak = rep["max_link"]
+    print(f"  hottest link: slots {a}<->{b} util={peak:.4f} "
+          f"(mean {rep['mean']:.4f}, std {rep['std']:.4f})")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="all 10 apps on the 36-tile system (slow)")
+    ap.add_argument("--llm", action="store_true",
+                    help="cross-execute paper apps vs model-derived LLM "
+                         "traffic (smoke-scale, tiny spec)")
     args = ap.parse_args()
+
+    if args.llm:
+        return main_llm()
 
     spec = spec_36() if args.full else spec_16()
     apps = APP_NAMES if args.full else APP_NAMES[:5]

@@ -25,6 +25,14 @@ import numpy as np
 
 from .problem import CPU, GPU, LLC, SystemSpec
 
+
+class TrafficValidationError(ValueError):
+    """A traffic specification failed validation — unknown application or
+    model/phase name, a mesh that does not tile the GPU pool, or an explicit
+    matrix that is non-square / non-finite / negative / all-zero. Raised at
+    problem-construction time so bad requests are rejected at admission
+    instead of crashing a worker mid-run."""
+
 # Paper Table 1 applications. The intensity scalar is a relative injection
 # rate (flits/cycle) used by netsim and EDP; values span the moderate range
 # typical of Rodinia-class workloads.

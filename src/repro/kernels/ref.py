@@ -18,6 +18,37 @@ def minplus_ref(a: jax.Array, b: jax.Array) -> jax.Array:
 
 
 # ------------------------------------------------------- link-util walk
+def walk_accumulate_np(nh, f, delay, *, max_hops: int):
+    """Pure-numpy scalar-loop oracle: walk each (src, dst) pair one hop at
+    a time exactly as the routing recurrence defines it. Third corner of
+    the link-util conformance triangle (numpy / jnp / Pallas-interpret),
+    mirroring minplus/forest."""
+    import numpy as np
+
+    nh = np.asarray(nh)
+    f = np.asarray(f, np.float32)
+    delay = np.asarray(delay, np.float32)
+    n = nh.shape[0]
+    hops = np.zeros((n, n), np.float32)
+    dsum = np.zeros((n, n), np.float32)
+    util = np.zeros((n, n), np.float32)
+    visits = np.zeros((n,), np.float32)
+    for i in range(n):
+        for j in range(n):
+            cur = i
+            for _ in range(max_hops):
+                if cur == j:
+                    break
+                nxt = int(nh[cur, j])
+                util[cur, nxt] += f[i, j]
+                visits[cur] += f[i, j]
+                dsum[i, j] += delay[cur, nxt]
+                hops[i, j] += 1.0
+                cur = nxt
+    visits += f.sum(axis=0)  # dst router traversal at completion
+    return hops, dsum, util, visits
+
+
 def walk_accumulate_ref(nh, f, delay, *, max_hops: int):
     """Scatter-add formulation (the GPU-natural port) — reuses the routing
     walk and adapts output dtypes to the kernel contract."""

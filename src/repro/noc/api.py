@@ -32,7 +32,8 @@ from repro.core.local_search import ParetoSet, SearchHistory
 from repro.core.objectives import CASES, N_OBJ
 from repro.core.pareto import PhvContext
 from repro.core.problem import Design, SystemSpec
-from repro.core.traffic import avg_traffic, traffic_matrix
+from repro.core.traffic import (APPLICATIONS, TrafficValidationError,
+                                avg_traffic, traffic_matrix)
 
 SPEC_NAMES = ("tiny", "16", "36", "64")
 
@@ -58,8 +59,18 @@ class NocProblem:
     ``traffic`` is one of:
       * an application name (see ``repro.core.traffic.APP_NAMES``),
       * a sequence of application names — their aggregated (AVG) traffic,
-        the leave-one-out construction of the agnostic study (§6.4), or
+        the leave-one-out construction of the agnostic study (§6.4),
+      * a model scenario ``{"model": arch, "phase": phase, "mesh": [d, m]}``
+        — traffic derived from a real model config by ``repro.workloads``
+        (DESIGN.md §11; ``phase`` defaults to "train.fwd", ``mesh`` to the
+        `derive_mesh` default, and both are resolved at construction so
+        every spelling of a scenario hashes identically), or
       * an explicit (N, N) flit-rate matrix.
+
+    Every variant is validated at construction (unknown app/model/phase
+    names, non-tiling meshes, and non-finite / negative / zero-sum / wrongly
+    shaped matrices raise ``TrafficValidationError``), so the server rejects
+    bad requests at admission instead of crashing a worker.
 
     ``case`` selects the objective subset (``repro.core.objectives.CASES``);
     ``backend`` selects the batched-APSP routing backend (core.routing);
@@ -86,6 +97,48 @@ class NocProblem:
             raise ValueError(
                 f"unknown case {self.case!r}; choose from {tuple(CASES)}")
         check_forest_backend(self.forest_backend)
+        object.__setattr__(self, "traffic", self._validate_traffic())
+
+    def _validate_traffic(self):
+        """Validate + canonicalize ``traffic``; raises TrafficValidationError."""
+        t = self.traffic
+        if isinstance(t, dict):
+            # deferred: repro.workloads pulls in the model-config registry
+            from repro.workloads import normalize_model_traffic
+
+            return normalize_model_traffic(self.spec, t)
+        if isinstance(t, str):
+            if t not in APPLICATIONS:
+                raise TrafficValidationError(
+                    f"unknown application {t!r}; known: "
+                    f"{', '.join(APPLICATIONS)}")
+            return t
+        if isinstance(t, (list, tuple)) and t and isinstance(t[0], str):
+            unknown = [a for a in t if a not in APPLICATIONS]
+            if unknown:
+                raise TrafficValidationError(
+                    f"unknown applications {unknown}; known: "
+                    f"{', '.join(APPLICATIONS)}")
+            return tuple(t)
+        try:
+            arr = np.asarray(t, dtype=np.float64)
+        except (TypeError, ValueError) as e:
+            raise TrafficValidationError(
+                f"traffic matrix is not numeric: {e}") from e
+        n = self.spec.n_tiles
+        if arr.shape != (n, n):
+            raise TrafficValidationError(
+                f"traffic matrix shape {arr.shape} != ({n}, {n}) for this "
+                "spec")
+        if not np.all(np.isfinite(arr)):
+            raise TrafficValidationError(
+                "traffic matrix has non-finite entries")
+        if np.any(arr < 0):
+            raise TrafficValidationError(
+                "traffic matrix has negative entries")
+        if arr.sum() <= 0:
+            raise TrafficValidationError("traffic matrix sums to zero")
+        return arr
 
     def _canonical(self) -> str:
         # Cached: the dataclass is frozen, and re-serializing a 64-tile
@@ -109,6 +162,11 @@ class NocProblem:
         t = self.traffic
         if isinstance(t, str):
             return traffic_matrix(self.spec, t)
+        if isinstance(t, dict):
+            from repro.workloads import scenario_matrix
+
+            return scenario_matrix(self.spec, t["model"], t["phase"],
+                                   mesh=t["mesh"])
         if isinstance(t, (list, tuple)) and t and isinstance(t[0], str):
             return avg_traffic(self.spec, list(t))
         return np.asarray(t, dtype=np.float64)
@@ -134,6 +192,9 @@ class NocProblem:
         t = self.traffic
         if isinstance(t, str):
             traffic: Any = {"app": t}
+        elif isinstance(t, dict):
+            traffic = {"model": t["model"], "phase": t["phase"],
+                       "mesh": list(t["mesh"])}
         elif isinstance(t, (list, tuple)) and t and isinstance(t[0], str):
             traffic = {"avg": list(t)}
         else:
@@ -147,6 +208,8 @@ class NocProblem:
         t = obj["traffic"]
         if "app" in t:
             traffic: Any = t["app"]
+        elif "model" in t:
+            traffic = {k: t[k] for k in ("model", "phase", "mesh") if k in t}
         elif "avg" in t:
             traffic = tuple(t["avg"])
         else:

@@ -46,6 +46,12 @@ def _problem_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--avg", default=None,
                     help="comma-separated apps; use their aggregated traffic "
                          "instead of --app (leave-one-out AVG construction)")
+    ap.add_argument("--traffic", default=None,
+                    help="explicit traffic spec, overriding --app/--avg: "
+                         "model:<arch>:<phase> derives traffic from a model "
+                         "config (repro.workloads; e.g. "
+                         "model:qwen3-moe-30b-a3b:serve.decode), any other "
+                         "value is an application name")
     ap.add_argument("--case", default="case3",
                     help="objective case (case1..case5, default case3)")
     ap.add_argument("--backend", default="auto",
@@ -61,8 +67,26 @@ def _budget_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--seed", type=int, default=0)
 
 
+def parse_traffic_arg(value: str):
+    """``model:<arch>:<phase>`` -> a model-scenario dict; anything else is
+    an application name (validated by NocProblem)."""
+    if value.startswith("model:"):
+        _, _, rest = value.partition(":")
+        arch, sep, phase = rest.partition(":")
+        spec = {"model": arch}
+        if sep:
+            spec["phase"] = phase
+        return spec
+    return value
+
+
 def _build_problem(args) -> NocProblem:
-    traffic = tuple(args.avg.split(",")) if args.avg else args.app
+    if getattr(args, "traffic", None):
+        traffic = parse_traffic_arg(args.traffic)
+    elif args.avg:
+        traffic = tuple(args.avg.split(","))
+    else:
+        traffic = args.app
     return NocProblem(spec=named_spec(args.spec), traffic=traffic,
                       case=args.case, backend=args.backend,
                       forest_backend=args.forest_backend)

@@ -30,6 +30,7 @@ import dataclasses
 import hashlib
 import json
 
+from repro.core.traffic import TrafficValidationError
 from repro.dist.state import TRAJECTORY_FIELDS
 from repro.noc.api import Budget, NocProblem
 from repro.noc.optimizers import StageDistConfig
@@ -67,6 +68,11 @@ def validate_request(problem_json, budget_json, config_json=None,
             f"problem must be a JSON object, got {type(problem_json).__name__}")
     try:
         problem = NocProblem.from_json(problem_json)
+    except TrafficValidationError as exc:
+        # bad traffic content (NaN/negative/zero-sum matrix, unknown
+        # model/phase/app name, non-tiling mesh) — distinct from a
+        # structurally malformed problem so clients can tell them apart.
+        raise AdmissionRejected("invalid_traffic", str(exc))
     except Exception as exc:  # noqa: BLE001 — anything malformed lands here
         raise AdmissionRejected(
             "invalid_problem",

@@ -161,6 +161,18 @@ def test_walk_accumulate_matches_ref(spec_name):
     np.testing.assert_allclose(np.asarray(util_k), np.asarray(util_r), rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(np.asarray(visits_k), np.asarray(visits_r), rtol=1e-4, atol=1e-5)
 
+    # third corner of the conformance triangle: the scalar-loop numpy
+    # oracle must agree with both the jnp scatter-add port and the kernel
+    # (mirrors the minplus/forest numpy-jnp-pallas triangles).
+    hops_n, dsum_n, util_n, visits_n = ref.walk_accumulate_np(
+        nh, fs, c.link_delay, max_hops=c.max_hops
+    )
+    np.testing.assert_allclose(hops_n, np.asarray(hops_r), atol=1e-5)
+    np.testing.assert_allclose(dsum_n, np.asarray(dsum_r), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(util_n, np.asarray(util_r), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(visits_n, np.asarray(visits_r), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(util_n, np.asarray(util_k), rtol=1e-4, atol=1e-5)
+
 
 # ---------------------------------------------------------------- attention
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -1,0 +1,303 @@
+"""repro.workloads — model-derived NoC traffic (DESIGN.md §11).
+
+Contract under test:
+
+* generators — every (model x phase) scenario yields a matrix in the
+  `core/traffic.py` convention: non-negative, zero diagonal, normalized
+  to the phase intensity, deterministic, and structurally distinct per
+  scenario (MoE training is GPU<->GPU all-to-all heavy, serving decode is
+  many-to-few LLC reads).
+* mapping — the logical (data, model) mesh tiles the GPU set exactly and
+  places shards/home-LLCs inside the spec's id ranges.
+* problem plumbing — ``NocProblem(traffic={"model": ...})`` normalizes,
+  JSON round-trips, and hashes stably through ``canonical_request_key``
+  (dict order / mesh spelling invariant, phase-sensitive).
+* admission — malformed traffic (NaN / negative / zero-sum matrices,
+  unknown model or phase) is rejected at submit as a structured
+  ``invalid_traffic`` error, never by crashing a worker.
+* phase scoring — phase-weighted EDP is the weighted mean of per-phase
+  EDPs; the trace link report is finite and peaks on a real link.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import spec_16, spec_64, spec_tiny
+from repro.core.traffic import TrafficValidationError
+from repro.noc import Budget, NocProblem
+from repro.workloads import (LLM_STUDY_SCENARIOS, PHASE_APP_NAMES,
+                             PHASE_INTENSITY, PHASES, derive_mesh,
+                             normalize_model_traffic, parse_scenario,
+                             phase_weighted_edp, place_model,
+                             scenario_matrix, trace_for, trace_link_report)
+from repro.workloads.mapping import WorkloadMesh
+
+SMALL = dict(iters_max=1, n_swaps=4, n_link_moves=4, max_local_steps=5)
+
+
+# ==========================================================================
+# traffic generators
+# ==========================================================================
+def test_scenario_registry_covers_every_model_phase():
+    assert len(PHASE_APP_NAMES) == len(set(PHASE_APP_NAMES)) >= 50
+    for name in PHASE_APP_NAMES:
+        arch, phase = parse_scenario(name)
+        assert phase in PHASES
+
+
+@pytest.mark.parametrize("scenario", LLM_STUDY_SCENARIOS)
+def test_generator_invariants(scenario):
+    spec = spec_64()
+    arch, phase = parse_scenario(scenario)
+    f = scenario_matrix(spec, arch, phase)
+    assert f.shape == (spec.n_tiles, spec.n_tiles)
+    assert np.all(np.isfinite(f)) and np.all(f >= 0)
+    np.testing.assert_allclose(np.diag(f), 0.0)
+    np.testing.assert_allclose(f.sum(), PHASE_INTENSITY[phase], rtol=1e-9)
+    # byte-deterministic: the cache key contract depends on it
+    again = scenario_matrix(spec, arch, phase)
+    assert np.array_equal(f, again)
+
+
+def test_study_scenarios_pairwise_distinct():
+    spec = spec_64()
+    mats = [scenario_matrix(spec, *parse_scenario(s))
+            for s in LLM_STUDY_SCENARIOS]
+    assert len(LLM_STUDY_SCENARIOS) >= 6
+    for i in range(len(mats)):
+        for j in range(i + 1, len(mats)):
+            a = mats[i] / mats[i].sum()
+            b = mats[j] / mats[j].sum()
+            assert np.abs(a - b).sum() > 1e-3, (
+                f"{LLM_STUDY_SCENARIOS[i]} ~ {LLM_STUDY_SCENARIOS[j]}")
+
+
+def _class_shares(spec, f):
+    """Fraction of total volume per (src-class, dst-class) pair."""
+    c, m = spec.n_cpu, spec.n_llc
+    bounds = [(0, c), (c, c + m), (c + m, spec.n_tiles)]
+    names = ("cpu", "llc", "gpu")
+    tot = f.sum()
+    return {(names[i], names[j]):
+            f[a:b, p:q].sum() / tot
+            for i, (a, b) in enumerate(bounds)
+            for j, (p, q) in enumerate(bounds)}
+
+
+def test_phase_structure_signatures():
+    """Each workload class concentrates traffic where the model says it
+    should: MoE training is more GPU<->GPU than dense (all-to-all on top
+    of the TP rings); serving decode is many-to-few KV reads, so the
+    LLC->GPU share dominates and beats every training phase's."""
+    spec = spec_64()
+    dense = _class_shares(spec, scenario_matrix(spec, "yi-6b", "train.fwd"))
+    moe = _class_shares(
+        spec, scenario_matrix(spec, "qwen3-moe-30b-a3b", "train.fwd"))
+    decode = _class_shares(
+        spec, scenario_matrix(spec, "qwen3-moe-30b-a3b", "serve.decode"))
+
+    assert moe["gpu", "gpu"] > dense["gpu", "gpu"] > 0.5
+    assert decode["llc", "gpu"] > 0.5          # KV-cache reads dominate
+    assert decode["llc", "gpu"] > dense["llc", "gpu"]
+    assert decode["llc", "gpu"] > moe["llc", "gpu"]
+
+
+def test_generator_scales_down_to_every_spec():
+    for spec in (spec_64(), spec_16(), spec_tiny()):
+        f = scenario_matrix(spec, "yi-6b", "serve.decode")
+        assert f.shape == (spec.n_tiles, spec.n_tiles)
+        np.testing.assert_allclose(
+            f.sum(), PHASE_INTENSITY["serve.decode"], rtol=1e-9)
+
+
+# ==========================================================================
+# mapping
+# ==========================================================================
+def test_derive_mesh_tiles_gpus():
+    for spec in (spec_64(), spec_16(), spec_tiny()):
+        mesh = derive_mesh_for(spec, "yi-6b")
+        assert mesh.data * mesh.model == spec.n_gpu
+
+
+def derive_mesh_for(spec, arch):
+    from repro.configs import get_config
+    return derive_mesh(get_config(arch), spec.n_gpu)
+
+
+def test_place_model_id_ranges():
+    spec = spec_64()
+    mesh = derive_mesh_for(spec, "yi-6b")
+    mp = place_model(spec, mesh)
+    c, m = spec.n_cpu, spec.n_llc
+    assert sorted(mp.gpu_ids.ravel().tolist()) == list(
+        range(c + m, spec.n_tiles))
+    assert np.all((mp.home_llc >= c) & (mp.home_llc < c + m))
+    assert 0 <= mp.master_cpu < c
+
+
+def test_place_model_rejects_non_tiling_mesh():
+    with pytest.raises(ValueError):
+        place_model(spec_64(), WorkloadMesh(data=3, model=7))
+
+
+# ==========================================================================
+# NocProblem plumbing: normalization, JSON, cache keys, validation
+# ==========================================================================
+def _key(problem, seed=0):
+    from repro.noc.optimizers import StageDistConfig
+    from repro.noc.server import canonical_request_key, normalize_config
+
+    cfg = normalize_config(StageDistConfig(), executor="serial",
+                           shard_timeout_s=None, max_retries=1,
+                           retry_backoff_s=0.0)
+    return canonical_request_key(problem, Budget(max_evals=60, seed=seed),
+                                 cfg)
+
+
+def test_model_traffic_normalizes_and_round_trips():
+    spec = spec_tiny()
+    p = NocProblem(spec=spec, traffic={"model": "yi-6b"})
+    assert p.traffic == {"model": "yi-6b", "phase": "train.fwd",
+                         "mesh": (1, 5)}
+    back = NocProblem.from_json(json.loads(json.dumps(p.to_json())))
+    assert back == p
+    f = p.traffic_matrix()
+    np.testing.assert_allclose(
+        f.sum(), PHASE_INTENSITY["train.fwd"], rtol=1e-9)
+
+
+def test_model_traffic_cache_key_stable_and_phase_sensitive():
+    spec = spec_tiny()
+    base = NocProblem(spec=spec, traffic={"model": "yi-6b",
+                                          "phase": "serve.decode"})
+    # explicit default mesh and reordered keys hash identically
+    spelled = NocProblem(spec=spec, traffic={"mesh": [1, 5],
+                                             "phase": "serve.decode",
+                                             "model": "yi-6b"})
+    assert _key(base) == _key(spelled)
+    other_phase = NocProblem(spec=spec, traffic={"model": "yi-6b",
+                                                 "phase": "serve.prefill"})
+    assert _key(base) != _key(other_phase)
+
+
+def test_model_traffic_rejects_bad_specs():
+    spec = spec_tiny()
+    for bad in (
+        {"model": "not-a-model"},
+        {"model": "yi-6b", "phase": "train.nope"},
+        {"model": "yi-6b", "mesh": [2, 2]},          # does not tile 5 GPUs
+        {"model": "yi-6b", "mesh": [1, 5, 1]},
+        {"model": "yi-6b", "unexpected": 1},
+        {"phase": "train.fwd"},                      # model is required
+    ):
+        with pytest.raises(TrafficValidationError):
+            NocProblem(spec=spec, traffic=bad)
+    with pytest.raises(TrafficValidationError):
+        normalize_model_traffic(spec, {"model": "yi-6b", "mesh": [0, 5]})
+
+
+def test_matrix_traffic_rejects_degenerate():
+    spec = spec_tiny()
+    n = spec.n_tiles
+    good = np.full((n, n), 1.0 / (n * n))
+    NocProblem(spec=spec, traffic=good)  # sanity: dense matrices admit
+    for bad in (
+        np.full((n, n), np.nan),
+        -good,
+        np.zeros((n, n)),
+        np.ones((n + 1, n + 1)),
+    ):
+        with pytest.raises(TrafficValidationError):
+            NocProblem(spec=spec, traffic=bad)
+    with pytest.raises(TrafficValidationError):
+        NocProblem(spec=spec, traffic="NOT_AN_APP")
+    with pytest.raises(TrafficValidationError):
+        NocProblem(spec=spec, traffic=("BFS", "NOT_AN_APP"))
+
+
+# ==========================================================================
+# server admission
+# ==========================================================================
+def test_admission_rejects_invalid_traffic():
+    from repro.noc.server import Client
+
+    spec = spec_tiny()
+    n = spec.n_tiles
+    bj = Budget(max_evals=60, seed=0).to_json()
+    ok = NocProblem(spec=spec, traffic="BFS").to_json()
+    with Client.local(n_workers=1) as c:
+        for traffic in (
+            {"model": "not-a-model"},
+            {"model": "yi-6b", "phase": "train.nope"},
+            {"matrix": np.full((n, n), np.nan).tolist()},
+            {"matrix": (-np.ones((n, n))).tolist()},
+            {"matrix": np.zeros((n, n)).tolist()},
+        ):
+            pj = dict(ok, traffic=traffic)
+            resp = c.submit(pj, bj)
+            assert resp["error"]["code"] == "invalid_traffic", traffic
+
+
+def test_server_runs_model_traffic_end_to_end():
+    from repro.noc.server import Client
+
+    pj = NocProblem(spec=spec_tiny(),
+                    traffic={"model": "yi-6b",
+                             "phase": "serve.decode"}).to_json()
+    bj = Budget(max_evals=60, seed=0).to_json()
+    with Client.local(n_workers=1) as c:
+        assert c.submit(pj, bj, dict(SMALL), request_id="m0")[
+            "status"] == "queued"
+        c.drain()
+        assert c.status("m0")["status"] == "done"
+        res = c.result("m0")
+        assert len(res.designs) >= 1
+        # identical resubmission is a cache hit at the door
+        dup = c.submit(pj, bj, dict(SMALL))
+        assert dup["cache_hit"] is True
+
+
+# ==========================================================================
+# phase traces
+# ==========================================================================
+def test_phase_weighted_edp_is_weighted_mean():
+    spec = spec_tiny()
+    design = spec.mesh_design()
+    trace = trace_for("qwen3-moe-30b-a3b", "serving")
+    pw = phase_weighted_edp(spec, design, trace)
+    assert set(pw["per_phase"]) == {"serve.prefill", "serve.decode"}
+    want = (sum(pw["weights"][p] * pw["per_phase"][p]
+                for p in pw["per_phase"])
+            / sum(pw["weights"].values()))
+    assert pw["edp"] == pytest.approx(want)
+    assert np.isfinite(pw["edp"]) and pw["edp"] > 0
+
+
+def test_trace_link_report_peaks_on_a_real_link():
+    spec = spec_tiny()
+    design = spec.mesh_design()
+    trace = trace_for("yi-6b", "training")
+    rep = trace_link_report(spec, design, trace)
+    (a, b), peak = rep["max_link"]
+    assert a != b and peak > 0
+    assert np.all(np.isfinite(rep["util"]))
+    np.testing.assert_allclose(rep["util"], rep["util"].T, atol=1e-9)
+    assert rep["mean"] >= 0 and rep["std"] >= 0
+
+
+# ==========================================================================
+# CLI
+# ==========================================================================
+def test_cli_model_traffic_run(capsys):
+    from repro.noc import cli
+
+    rc = cli.main([
+        "run", "--spec", "tiny", "--traffic", "model:yi-6b:serve.decode",
+        "--max-evals", "60", "--seed", "0",
+        "--set", "iters_max=1", "--set", "n_swaps=4",
+        "--set", "n_link_moves=4", "--set", "max_local_steps=5",
+    ])
+    assert rc == 0
+    assert "pareto=" in capsys.readouterr().out
