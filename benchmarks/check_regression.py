@@ -41,7 +41,9 @@ TRACKED = (
     "forest_pallas_4k_us",
     "forest_pallas_interp_512_us",
     "stage_meta_search_us_per_step",
+    "stage_fused_us_per_step",
     "stage_dist_4w_us",
+    "stage_spmd_2w_us",
     "stage_dist_ckpt_4w_us",
     "serve_submit_overhead_us",
     "serve_8req_4w_us",

@@ -151,10 +151,33 @@ def main(reduced: bool = False) -> None:
         _meta_greedy(spec, meta_model, designs[0], np.random.default_rng(3),
                      n_swaps=24, n_link_moves=24, max_steps=steps)
 
+    meta()  # warm the fused scorer's shape-cache (default backend="fused")
     t_meta = _min_of(meta, n=3)
     row("stage_meta_search", t_meta / steps * 1e6,
-        f"us_per_step;neighborhood=48;steps<={steps}")
+        f"us_per_step;neighborhood=48;steps<={steps};backend=fused")
     bench["stage_meta_search_us_per_step"] = t_meta / steps * 1e6
+
+    # Steady-state fused scoring dispatch (core.fused): one MetaScorer,
+    # one padded neighborhood, score_moves only — isolates the per-step
+    # device pipeline (move->featurize->normalize->traverse->argmax) from
+    # the rng sampling and accept bookkeeping the row above includes.
+    from repro.core.fused import MetaScorer
+    from repro.core.problem import sample_neighbor_moves
+
+    sc = MetaScorer(spec, meta_model)
+    mv = sample_neighbor_moves(spec, designs[0], np.random.default_rng(4),
+                               n_swaps=24, n_link_moves=24)
+    sc.score_moves(mv)  # warm compile
+    reps = 20
+
+    def fused_steps():
+        for _ in range(reps):
+            sc.score_moves(mv)
+
+    t_fused = _min_of(fused_steps, n=3)
+    row("stage_fused", t_fused / reps * 1e6,
+        f"us_per_step;score_moves;B={len(mv)};one_dispatch")
+    bench["stage_fused_us_per_step"] = t_fused / reps * 1e6
 
     # Distributed multi-start dispatch: 4 process workers (spawn start
     # method — each child pays interpreter + jax import, which dominates
@@ -177,6 +200,24 @@ def main(reduced: bool = False) -> None:
         f"workers=4;process;evals={dist_res.n_evals};"
         f"pareto={len(dist_res.designs)}")
     bench["stage_dist_4w_us"] = t.dt * 1e6
+
+    # shard_map executor (DESIGN.md §12): in-order shards whose evaluator
+    # batches run as ONE multi-device program each. On this 1-device CPU
+    # container the mesh is trivial — the row tracks the shard_map
+    # dispatch overhead vs the serial executor; on a real multi-device
+    # host the same row shows the batch-parallel win.
+    import jax as _jax
+
+    spmd_cfg = {"n_workers": 2, "executor": "spmd", "iters_max": 2,
+                "n_swaps": 6, "n_link_moves": 6, "max_local_steps": 20}
+    with Timer() as t:
+        spmd_res = noc_run(dist_problem, "stage_dist",
+                           budget=Budget(max_evals=400, seed=0),
+                           config=spmd_cfg)
+    row("stage_spmd_2w", t.dt * 1e6,
+        f"workers=2;spmd;ndev={_jax.device_count()};"
+        f"evals={spmd_res.n_evals}")
+    bench["stage_spmd_2w_us"] = t.dt * 1e6
 
     # Crash-safe round checkpoints (DESIGN.md §9): coordinator state is
     # persisted atomically after every sync round. The row is the save

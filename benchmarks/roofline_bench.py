@@ -18,6 +18,26 @@ CELLS = [("whisper-base", "train_4k"), ("gemma3-1b", "decode_32k")]
 def main(reduced: bool = False) -> None:
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
+    if reduced:
+        # Smoke: the import chain through repro.dist.sharding must hold —
+        # this row failing loudly is the guard against the PR-9 breakage
+        # (launch/roofline importing a displaced sharding module) coming
+        # back. Full cells are subprocess-lowered minutes each; the
+        # reduced suite only proves the entry point is runnable.
+        with Timer() as t:
+            import repro.launch.roofline  # noqa: F401
+            import repro.dist.sharding  # noqa: F401
+            proc = subprocess.run(
+                [sys.executable, "-c",
+                 "import repro.launch.roofline, repro.launch.perf, "
+                 "repro.launch.dryrun"],
+                capture_output=True, text=True, env=env, timeout=300,
+            )
+        if proc.returncode != 0:
+            raise RuntimeError(
+                "roofline import smoke failed:\n" + proc.stderr[-2000:])
+        row("roofline_import_smoke", t.dt * 1e6, "ok")
+        return
     for arch, shape in CELLS:
         with Timer() as t:
             proc = subprocess.run(

@@ -15,6 +15,8 @@ batch, consuming the precomputed (dist, next-hop) tables.
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
 from functools import partial
 
 import jax
@@ -25,6 +27,35 @@ from . import routing
 from .objectives import (N_OBJ, SpecConsts, design_cost, evaluate_with_tables,
                          make_consts)
 from .problem import Design, SystemSpec
+
+#: ambient SPMD mesh — set via :func:`spmd_scope`; Evaluators constructed
+#: inside the scope run their batch pipeline as one shard_map program over
+#: it (the same contextvar-at-construction pattern as repro.dist.worker's
+#: cooperative deadline).
+_SPMD_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_core_spmd_mesh", default=None)
+
+
+@contextlib.contextmanager
+def spmd_scope(mesh):
+    """Evaluators constructed inside this scope shard their candidate
+    batches across ``mesh`` (a 1-D jax.sharding.Mesh): cost build → batched
+    APSP → objective walk run as ONE multi-device program per dispatch,
+    each device serving batch/ndev candidates. This is how the distributed
+    executor (repro.dist.worker, ``executor="spmd"``) turns a chain batch
+    into a single multi-device dispatch instead of per-device processes."""
+    token = _SPMD_MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _SPMD_MESH.reset(token)
+
+
+def make_spmd_mesh():
+    """1-D mesh over every visible device (axis ``"dev"``)."""
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(jax.devices()), ("dev",))
 
 
 class Evaluator:
@@ -51,8 +82,35 @@ class Evaluator:
             jax.vmap(partial(evaluate_with_tables, self.consts),
                      in_axes=(0, 0, None, 0, 0))
         )
+        self.mesh = _SPMD_MESH.get()
+        self._spmd_fn = (self._build_spmd_fn() if self.mesh is not None
+                         else None)
         self.n_evals = 0  # evaluation counter (search-cost accounting)
         self.n_calls = 0  # XLA dispatches (batching-efficiency accounting)
+
+    def _build_spmd_fn(self):
+        """One jitted shard_map program for the whole batch pipeline: each
+        device runs cost → APSP → objective walk on its batch shard; the
+        traffic matrix rides in replicated. Numerically identical to the
+        single-device path — sharding the batch axis splits independent
+        per-design programs, it reorders no reductions."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        consts, backend, interpret = self.consts, self.backend, self.interpret
+
+        def local_fn(perms, adjs, f):
+            costs = jax.vmap(partial(design_cost, consts))(adjs)
+            dist, nh = routing.routing_tables_batched(
+                costs, consts.apsp_iters, backend=backend,
+                interpret=interpret)
+            return jax.vmap(partial(evaluate_with_tables, consts),
+                            in_axes=(0, 0, None, 0, 0))(
+                perms, adjs, f, dist, nh)
+
+        p = P(self.mesh.axis_names[0])
+        return jax.jit(shard_map(local_fn, mesh=self.mesh,
+                                 in_specs=(p, p, P()), out_specs=(p, p)))
 
     # ------------------------------------------------------------- single
     def __call__(self, d: Design) -> np.ndarray:
@@ -77,14 +135,23 @@ class Evaluator:
                      for k in auxes[0]})
         b = len(designs)
         pad = 1 << max(0, (b - 1).bit_length())
+        if self._spmd_fn is not None:
+            # shard_map needs the batch divisible by the device count; pad
+            # further (still outside the jit — same shape-cache discipline).
+            ndev = self.mesh.devices.size
+            if pad % ndev:
+                pad = -(-pad // ndev) * ndev
         perms = np.stack([d.perm for d in designs] + [designs[-1].perm] * (pad - b))
         adjs = np.stack([d.adj for d in designs] + [designs[-1].adj] * (pad - b))
         perms_j, adjs_j = jnp.asarray(perms), jnp.asarray(adjs)
-        costs = self._cost_fn(adjs_j)
-        dist, nh = routing.routing_tables_batched(
-            costs, self.consts.apsp_iters,
-            backend=self.backend, interpret=self.interpret)
-        objs, aux = self._eval_fn(perms_j, adjs_j, self.f, dist, nh)
+        if self._spmd_fn is not None:
+            objs, aux = self._spmd_fn(perms_j, adjs_j, self.f)
+        else:
+            costs = self._cost_fn(adjs_j)
+            dist, nh = routing.routing_tables_batched(
+                costs, self.consts.apsp_iters,
+                backend=self.backend, interpret=self.interpret)
+            objs, aux = self._eval_fn(perms_j, adjs_j, self.f, dist, nh)
         self.n_evals += b
         self.n_calls += 1
         aux = {k: np.asarray(v[:b]) for k, v in aux.items()}

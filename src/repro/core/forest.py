@@ -196,16 +196,16 @@ def _flatten_tree(root: _Tree):
             np.asarray(value, np.float64), depth)
 
 
-def _predict_flat_jnp_fn():
-    """Build the jitted flat traversal lazily so importing the forest never
-    forces a jax initialization.
+def flat_forest_eval(thrfeat, child, value, xn, depth, n_trees, n_nodes):
+    """Traceable flat traversal body — (B,) forest mean from the packed
+    ``jnp_tensors()`` layout and an already-normalized f32 batch.
 
     Works on the (T*B,)-flattened node-pointer layout: every (tree, sample)
     pair advances one int32 pointer per level via three 1-D gathers. Leaves
     self-loop, so no leaf masking is needed and the loop fully unrolls
-    (``depth`` is static). All arrays are int32/f32 — predictions agree with
-    the f64 numpy oracle up to f32 threshold rounding."""
-    import jax
+    (``depth`` must be a Python int). Shared by the standalone jitted
+    predict below and the fused meta-search pipeline (core.fused), which
+    inlines it after its on-device featurization."""
     import jax.numpy as jnp
 
     def g(a, idx):
@@ -214,22 +214,31 @@ def _predict_flat_jnp_fn():
         # index clamping roughly halves the gather cost on CPU.
         return a.at[idx].get(mode="promise_in_bounds")
 
+    # thrfeat packs (threshold, feature) as one complex64 per node, so a
+    # level costs 3 gathers instead of 4 (features are tiny ints — exact
+    # as f32 imag parts).
+    b, f = xn.shape
+    xnf = xn.reshape(-1)
+    idx = jnp.repeat(jnp.arange(n_trees, dtype=jnp.int32) * n_nodes, b)
+    cols = jnp.tile(jnp.arange(b, dtype=jnp.int32) * f, n_trees)
+    for _ in range(depth):
+        tf = g(thrfeat, idx)
+        fi = jnp.imag(tf).astype(jnp.int32)
+        xv = g(xnf, fi + cols)
+        go_right = (xv > jnp.real(tf)).astype(jnp.int32)
+        idx = g(child, (idx * 2) + go_right)
+    return g(value, idx).reshape(n_trees, b).mean(axis=0)
+
+
+def _predict_flat_jnp_fn():
+    """Build the jitted flat traversal lazily so importing the forest never
+    forces a jax initialization."""
+    import jax
+
     @partial(jax.jit, static_argnames=("depth", "n_trees", "n_nodes"))
     def run(thrfeat, child, value, xn, depth, n_trees, n_nodes):
-        # thrfeat packs (threshold, feature) as one complex64 per node, so a
-        # level costs 3 gathers instead of 4 (features are tiny ints — exact
-        # as f32 imag parts).
-        b, f = xn.shape
-        xnf = xn.reshape(-1)
-        idx = jnp.repeat(jnp.arange(n_trees, dtype=jnp.int32) * n_nodes, b)
-        cols = jnp.tile(jnp.arange(b, dtype=jnp.int32) * f, n_trees)
-        for _ in range(depth):
-            tf = g(thrfeat, idx)
-            fi = jnp.imag(tf).astype(jnp.int32)
-            xv = g(xnf, fi + cols)
-            go_right = (xv > jnp.real(tf)).astype(jnp.int32)
-            idx = g(child, (idx * 2) + go_right)
-        return g(value, idx).reshape(n_trees, b).mean(axis=0)
+        return flat_forest_eval(thrfeat, child, value, xn,
+                                depth, n_trees, n_nodes)
 
     return run
 
@@ -372,12 +381,16 @@ class RegressionForest:
             vals[ti] = np.take(fl["value_flat"], idx)
         return np.mean(vals, axis=0)
 
-    def _predict_jnp(self, xn: np.ndarray) -> np.ndarray:
+    def jnp_tensors(self):
+        """Cached f32 device tensors of the flat forest, plus its static
+        shape key: ``(thrfeat, child, value), (depth, n_trees, n_nodes)``.
+
+        This is the packing `_predict_jnp` traverses; it is public so the
+        fused meta-search (core.fused) can inline the same traversal inside
+        its own jitted featurize→score pipeline without round-tripping
+        features through the host."""
         import jax.numpy as jnp
 
-        global _JITTED_FLAT
-        if _JITTED_FLAT is None:
-            _JITTED_FLAT = _predict_flat_jnp_fn()
         if self._flat_jnp is None:
             fl = self._flat
             thrfeat = (fl["threshold_flat"].astype(np.float32) +
@@ -387,6 +400,16 @@ class RegressionForest:
                 jnp.asarray(fl["child_flat"], jnp.int32),
                 jnp.asarray(fl["value_flat"], jnp.float32),
             )
+        fl = self._flat
+        return self._flat_jnp, (fl["depth"], len(self.trees), fl["n_nodes"])
+
+    def _predict_jnp(self, xn: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+
+        global _JITTED_FLAT
+        if _JITTED_FLAT is None:
+            _JITTED_FLAT = _predict_flat_jnp_fn()
+        self.jnp_tensors()
         b = xn.shape[0]
         pad = 1 << max(0, (b - 1).bit_length())  # bound recompiles
         xp = np.zeros((pad, xn.shape[1]), np.float32)

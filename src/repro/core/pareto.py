@@ -134,17 +134,34 @@ def hypervolume_with_batch(points: np.ndarray, cands: np.ndarray,
     return out
 
 
+PHV_BACKENDS = ("host", "jnp")
+
+
 class PhvContext:
     """Fixed normalization for PHV across one optimization run.
 
     Objectives are divided by the starting (3D-mesh) design's objective
     values, so every search for a given (spec, traffic, case) shares one
     scale; the reference point is ``ref_scale`` in those units (designs worse
-    than ``ref_scale``x mesh contribute zero volume)."""
+    than ``ref_scale``x mesh contribute zero volume).
+
+    ``phv_backend`` selects the batched scorer behind
+    :meth:`phv_with_batch` (the chain-step hot path): ``"host"`` (default)
+    is the exact f64 HSO here; ``"jnp"`` routes through the jitted f32
+    device twin (core.phv_jnp) — one XLA dispatch per chain step instead of
+    a per-survivor host recursion. The twin is OPT-IN because f32 cannot
+    resolve the chain accept test's 1e-12 epsilon near convergence (its
+    conformance bound is ~1e-5 relative); scalar entry points (``phv``,
+    ``phv_with``) always stay host-exact."""
 
     def __init__(self, mesh_objs: np.ndarray, obj_idx: tuple[int, ...],
-                 ref_scale: float = 1.6):
+                 ref_scale: float = 1.6, phv_backend: str = "host"):
+        if phv_backend not in PHV_BACKENDS:
+            raise ValueError(
+                f"phv_backend must be one of {PHV_BACKENDS}, "
+                f"got {phv_backend!r}")
         self.obj_idx = tuple(obj_idx)
+        self.phv_backend = phv_backend
         base = np.asarray(mesh_objs, dtype=np.float64)[list(obj_idx)]
         base = np.where(base <= 0, 1.0, base)
         self.base = base
@@ -178,4 +195,10 @@ class PhvContext:
             setn = np.zeros((0, len(self.obj_idx)))
         else:
             setn = self.normalize(np.atleast_2d(set_objs))
+        if self.phv_backend == "jnp" and len(self.obj_idx) <= 4:
+            # m = 5 would vmap an O(S^3) masked recursion — past the twin's
+            # win; no active case uses it, so it stays host-served.
+            from .phv_jnp import hypervolume_with_batch_jnp
+
+            return hypervolume_with_batch_jnp(setn, ext, self.ref)
         return hypervolume_with_batch(setn, ext, self.ref)

@@ -1,0 +1,113 @@
+"""Device twin of the batched hypervolume scorer (core.pareto).
+
+The PHV-greedy chain step (local_search) scores a whole candidate batch
+with ``PhvContext.phv_with_batch`` — host-side recursive HSO per surviving
+candidate. This module reformulates that scorer as a fixed-shape jitted
+program so a chain step's scoring can run as one device dispatch: the
+Pareto set rides in padded to a fixed row count with a validity mask, and
+the HSO recursion becomes a *masked* recursion on the (static) objective
+count — masked rows are pinned at the reference point, where they dominate
+nothing and contribute zero volume, so no data-dependent filtering or
+compaction is ever needed inside the jit.
+
+Shape discipline (PR-4): the set rows pad to ``max_set`` and the candidate
+batch to a power of two OUTSIDE the jit, so the cache keys on (S, B, m)
+quanta. The m >= 3 slab recursion vmaps the (m-1)-dimensional volume over
+prefix masks of the x-sorted set — O(S^2) slabs for m=3 at S <= 32 is tiny
+next to the objective evaluation the chain step already paid for.
+
+Precision contract: this twin computes in f32 (device default). The host
+scorer is f64, and the chain accept test uses a 1e-12 epsilon that f32
+cannot resolve near convergence — so the twin is an OPT-IN backend
+(``PhvContext(phv_backend="jnp")``), conformance-tested against the host
+oracle to f32 tolerances, and the default stays host-exact.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _hv_masked(pts, mask, ref):
+    """Hypervolume of the masked rows of ``pts`` w.r.t. ``ref`` (traceable).
+
+    ``pts`` (S, m) must already be clipped to ``ref``; masked-out rows are
+    replaced by ``ref`` itself (zero contribution). The recursion is on the
+    static trailing-dimension count, exactly mirroring pareto._hso: 1-D
+    closed form, 2-D staircase, m >= 3 x-sorted slabs — but with every
+    data-dependent set size replaced by masking."""
+    import jax
+    import jax.numpy as jnp
+
+    m = pts.shape[1]
+    p = jnp.where(mask[:, None], pts, ref[None, :])
+    if m == 1:
+        return jnp.maximum(ref[0] - p[:, 0].min(), 0.0)
+    order = jnp.argsort(p[:, 0], stable=True)
+    p = p[order]
+    x = p[:, 0]
+    x_hi = jnp.concatenate([x[1:], ref[:1]])
+    if m == 2:
+        ymin = jax.lax.cummin(p[:, 1])
+        return ((x_hi - x) * (ref[1] - ymin)).sum()
+    s = p.shape[0]
+    prefix = jnp.tril(jnp.ones((s, s), bool))  # prefix[i] = sorted rows 0..i
+    sub = jax.vmap(lambda msk: _hv_masked(p[:, 1:], msk, ref[1:]))(prefix)
+    return ((x_hi - x) * sub).sum()
+
+
+def _phv_batch_fn():
+    """Build the jitted batched scorer lazily (no jax at import)."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def run(setp, smask, cands, ref):
+        # HV(S ∪ {c}) = HV(S) + box(c) − HV(S clipped into box(c)); covered
+        # candidates collapse to HV(S) — the same exclusive-contribution
+        # identity as pareto.hypervolume_with_batch, vmapped over c.
+        c = jnp.minimum(cands, ref)
+        box = jnp.prod(jnp.maximum(ref - c, 0.0), axis=1)
+        sp = jnp.minimum(setp, ref)
+        base = _hv_masked(sp, smask, ref)
+        le = (sp[None, :, :] <= c[:, None, :]).all(2) & smask[None, :]
+        covered = le.any(1)
+        vol_sub = jax.vmap(
+            lambda ci: _hv_masked(jnp.maximum(sp, ci), smask, ref))(c)
+        return jnp.where(covered | (box <= 0), base, base + box - vol_sub)
+
+    return run
+
+
+_PHV_JIT = None
+
+
+def hypervolume_with_batch_jnp(points: np.ndarray, cands: np.ndarray,
+                               ref: np.ndarray, *,
+                               max_set: int = 32) -> np.ndarray:
+    """Device twin of :func:`pareto.hypervolume_with_batch` — (B,) array of
+    HV(points ∪ {c}) in f32. Pads the set to ``max_set`` quanta and the
+    batch to a power of two outside the jit."""
+    import jax.numpy as jnp
+
+    global _PHV_JIT
+    if _PHV_JIT is None:
+        _PHV_JIT = _phv_batch_fn()
+    pts = np.atleast_2d(np.asarray(points, np.float32))
+    cnd = np.atleast_2d(np.asarray(cands, np.float32))
+    ref32 = np.asarray(ref, np.float32)
+    m = ref32.shape[0]
+    s = pts.shape[0] if pts.size else 0
+    sp = max(max_set, 1 << max(0, (s - 1).bit_length())) if s else max_set
+    setp = np.broadcast_to(ref32, (sp, m)).copy()
+    if s:
+        setp[:s] = pts
+    smask = np.zeros(sp, bool)
+    smask[:s] = True
+    b = cnd.shape[0]
+    bp = 1 << max(0, (b - 1).bit_length())
+    cp = np.broadcast_to(ref32, (bp, m)).copy()
+    cp[:b] = cnd
+    out = _PHV_JIT(jnp.asarray(setp), jnp.asarray(smask),
+                   jnp.asarray(cp), jnp.asarray(ref32))
+    return np.asarray(out[:b], np.float64)

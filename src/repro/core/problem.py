@@ -17,7 +17,7 @@ Core ids are grouped by type: CPUs ``[0, C)``, LLCs ``[C, C+M)``, GPUs
 from __future__ import annotations
 
 import dataclasses
-from functools import cached_property
+from functools import cached_property, lru_cache
 
 import numpy as np
 
@@ -216,6 +216,13 @@ class Design:
         return d
 
 
+@lru_cache(maxsize=16)
+def _triu_pairs(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Cached upper-triangle index pair (iu0, iu1) for an n-tile spec."""
+    iu = np.triu_indices(n, 1)
+    return iu[0], iu[1]
+
+
 def existing_planar_links(spec: SystemSpec, adj: np.ndarray) -> list[tuple[int, int]]:
     iu = np.triu_indices(spec.n_tiles, 1)
     mask = adj[iu]
@@ -226,6 +233,78 @@ def absent_planar_pairs(spec: SystemSpec, adj: np.ndarray) -> list[tuple[int, in
     iu = np.triu_indices(spec.n_tiles, 1)
     ok = spec.planar_pair_mask[iu] & ~adj[iu]
     return list(zip(iu[0][ok].tolist(), iu[1][ok].tolist()))
+
+
+@dataclasses.dataclass
+class NeighborMoves:
+    """A sampled neighborhood in *move* form: every candidate is the base
+    design plus exactly one move (a tile swap or a single-link reposition).
+
+    The fused meta-search (core.fused) scores the whole neighborhood on
+    device from this representation — (B, 2) move index arrays instead of B
+    materialized ``Design`` objects with their (N, N) adjacency copies — and
+    only the argmax winner is ever materialized. ``materialize_all`` is the
+    legacy form; :func:`sample_neighbors` is exactly that, so move-order and
+    rng-stream parity between the two paths is structural, not tested-for."""
+
+    base: Design
+    swaps: np.ndarray      # (S, 2) int32 slot pairs, candidate i = swap i
+    rem: np.ndarray        # (L, 2) int32 removed link endpoints (triu order)
+    add: np.ndarray        # (L, 2) int32 added link endpoints (triu order)
+
+    def __len__(self) -> int:
+        return self.swaps.shape[0] + self.rem.shape[0]
+
+    def materialize(self, j: int) -> Design:
+        """Build candidate ``j`` (same order as :func:`sample_neighbors`:
+        swaps first, then link moves) — with full move validation."""
+        s = self.swaps.shape[0]
+        if j < s:
+            return self.base.swap_tiles(int(self.swaps[j, 0]),
+                                        int(self.swaps[j, 1]))
+        k = j - s
+        return self.base.move_link(
+            (int(self.rem[k, 0]), int(self.rem[k, 1])),
+            (int(self.add[k, 0]), int(self.add[k, 1])))
+
+    def materialize_all(self) -> list[Design]:
+        return [self.materialize(j) for j in range(len(self))]
+
+
+def sample_neighbor_moves(
+    spec: SystemSpec,
+    d: Design,
+    rng: np.random.Generator,
+    n_swaps: int,
+    n_link_moves: int,
+) -> NeighborMoves:
+    """Sample a neighborhood as :class:`NeighborMoves` (no ``Design``
+    construction). This IS the neighborhood sampler — ``sample_neighbors``
+    materializes its output — so the same (rng state, base, knobs) yields
+    the same candidates in the same order under either representation."""
+    n = spec.n_tiles
+    # Uniform ordered distinct pairs, drawn in one vectorized shot (the
+    # same per-pair distribution as choice(n, 2, replace=False), without
+    # n_swaps generator round-trips — the sampler is on the fused meta
+    # step's critical path). No-op swaps (identical core ids) are skipped,
+    # as before.
+    a = rng.integers(0, n, size=n_swaps)
+    b = rng.integers(0, n - 1, size=n_swaps)
+    b = b + (b >= a)
+    keep = d.perm[a] != d.perm[b]
+    swaps = np.stack([a[keep], b[keep]], axis=1).astype(np.int32)
+    iu0, iu1 = _triu_pairs(n)
+    present = d.adj[iu0, iu1].astype(bool)
+    link_idx = np.flatnonzero(present)
+    hole_idx = np.flatnonzero(spec.planar_pair_mask[iu0, iu1] & ~present)
+    rem = add = np.zeros((0, 2), np.int32)
+    if link_idx.size and hole_idx.size:
+        ri = link_idx[rng.integers(0, link_idx.size, size=n_link_moves)]
+        ai = hole_idx[rng.integers(0, hole_idx.size, size=n_link_moves)]
+        rem = np.stack([iu0[ri], iu1[ri]], axis=1).astype(np.int32)
+        add = np.stack([iu0[ai], iu1[ai]], axis=1).astype(np.int32)
+    return NeighborMoves(base=d, swaps=swaps.reshape(-1, 2),
+                         rem=rem, add=add)
 
 
 def sample_neighbors(
@@ -242,21 +321,8 @@ def sample_neighbors(
     sample size is a knob; with n large enough the argmax matches the full
     neighborhood with high probability) — all candidates are scored in ONE
     vmapped/jitted batch (DESIGN.md §4.1)."""
-    out: list[Design] = []
-    n = spec.n_tiles
-    for _ in range(n_swaps):
-        a, b = rng.choice(n, size=2, replace=False)
-        if d.perm[a] == d.perm[b]:
-            continue
-        out.append(d.swap_tiles(int(a), int(b)))
-    links = existing_planar_links(spec, d.adj)
-    holes = absent_planar_pairs(spec, d.adj)
-    if links and holes:
-        ri = rng.integers(0, len(links), size=n_link_moves)
-        ai = rng.integers(0, len(holes), size=n_link_moves)
-        for r, a in zip(ri, ai):
-            out.append(d.move_link(links[int(r)], holes[int(a)]))
-    return out
+    return sample_neighbor_moves(spec, d, rng, n_swaps, n_link_moves
+                                 ).materialize_all()
 
 
 def all_neighbors(spec: SystemSpec, d: Design) -> list[Design]:

@@ -22,10 +22,12 @@ import numpy as np
 from .evaluate import Evaluator
 from .features import design_features_batch
 from .forest import RegressionForest
+from .fused import MetaScorer, check_meta_backend
 from .local_search import (LocalResult, ParetoSet, SearchHistory,
                            local_search, local_search_batch)
 from .pareto import PhvContext
-from .problem import Design, SystemSpec, random_design, sample_neighbors
+from .problem import (Design, SystemSpec, random_design,
+                      sample_neighbor_moves, sample_neighbors)
 
 
 def _merge_forest_kwargs(forest_kwargs: dict | None,
@@ -72,7 +74,7 @@ class StageBatchResult:
     next_starts: list[Design] = dataclasses.field(default_factory=list)
 
 
-def _meta_greedy(
+def _meta_greedy_host(
     spec: SystemSpec,
     model: RegressionForest,
     d_from: Design,
@@ -82,10 +84,10 @@ def _meta_greedy(
     n_link_moves: int,
     max_steps: int = 30,
 ) -> Design:
-    """Greedy ascent on the learned Eval (Alg. 2 line 9). Uses only cheap
-    structural features — no objective evaluations are spent here. Each step
-    featurizes and scores the whole sampled neighborhood in one batched
-    extract + one flat-forest ``predict``."""
+    """The legacy host-side meta step: materialize every candidate as a
+    ``Design``, featurize the batch on the host, then one flat-forest
+    ``predict``. Kept as the ``meta_backend="host"`` arm and the parity
+    oracle for the fused path."""
     d_curr = d_from
     v_curr = float(model.predict(design_features_batch(spec, [d_curr]))[0])
     for _ in range(max_steps):
@@ -97,6 +99,56 @@ def _meta_greedy(
         if vals[j] <= v_curr + 1e-12:
             break
         d_curr, v_curr = cands[j], float(vals[j])
+    return d_curr
+
+
+def _meta_greedy(
+    spec: SystemSpec,
+    model: RegressionForest,
+    d_from: Design,
+    rng: np.random.Generator,
+    *,
+    n_swaps: int,
+    n_link_moves: int,
+    max_steps: int = 30,
+    backend: str = "fused",
+    scorer: MetaScorer | None = None,
+) -> Design:
+    """Greedy ascent on the learned Eval (Alg. 2 line 9). Uses only cheap
+    structural features — no objective evaluations are spent here.
+
+    ``backend="fused"`` (default) runs each step as ONE device dispatch:
+    the neighborhood stays in move form (problem.NeighborMoves) and
+    move-apply → featurize → normalize → forest traversal happen inside a
+    single jit (core.fused); only the winning move is materialized.
+    ``"fused-pallas"`` additionally routes the scoring tail through the
+    kernels/stage_fused Pallas kernel (TPU); ``"host"`` is the legacy
+    host-featurizing loop. All arms consume the identical rng stream and
+    accept with the same strict ``vals[j] > v_curr + 1e-12`` test, so the
+    accepted-move sequences agree across backends up to f32-vs-f64 forest
+    threshold rounding (pinned by tests/test_fused.py).
+
+    ``scorer`` reuses an already-built :class:`~repro.core.fused.MetaScorer`
+    for this model (the multi-chain driver scores every chain's restart
+    against one fitted forest)."""
+    check_meta_backend(backend)
+    if backend == "host":
+        return _meta_greedy_host(
+            spec, model, d_from, rng, n_swaps=n_swaps,
+            n_link_moves=n_link_moves, max_steps=max_steps)
+    sc = scorer if scorer is not None else MetaScorer(
+        spec, model, backend=backend)
+    d_curr = d_from
+    v_curr = sc.score_base(d_curr)
+    for _ in range(max_steps):
+        moves = sample_neighbor_moves(spec, d_curr, rng, n_swaps,
+                                      n_link_moves)
+        if not len(moves):
+            break
+        j, vj = sc.score_moves(moves)
+        if vj <= v_curr + 1e-12:
+            break
+        d_curr, v_curr = moves.materialize(j), vj
     return d_curr
 
 
@@ -113,6 +165,7 @@ def moo_stage(
     max_local_steps: int = 10_000,
     forest_kwargs: dict | None = None,
     forest_backend: str | None = None,
+    meta_backend: str = "fused",
     history: SearchHistory | None = None,
     max_evals: int | None = None,
 ) -> StageResult:
@@ -120,7 +173,10 @@ def moo_stage(
     evaluations (absolute w.r.t. ``ev.n_evals``, same accounting as
     :func:`stage_batch`); ``None`` keeps the legacy unbudgeted behavior.
     ``forest_backend`` selects the surrogate inference backend
-    (core.forest.FOREST_BACKENDS; ``None`` keeps the forest's ``"auto"``)."""
+    (core.forest.FOREST_BACKENDS; ``None`` keeps the forest's ``"auto"``);
+    ``meta_backend`` selects the meta-search scoring path
+    (core.fused.META_BACKENDS — see :func:`_meta_greedy`)."""
+    check_meta_backend(meta_backend)
     rng = np.random.default_rng(seed)
     history = history or SearchHistory(ev, ctx)
     s_global = ParetoSet.empty()
@@ -174,6 +230,7 @@ def moo_stage(
         d_restart = _meta_greedy(
             spec, model, res.d_last, rng,
             n_swaps=n_swaps, n_link_moves=n_link_moves,
+            backend=meta_backend,
         )
         if d_restart.key() == res.d_last.key():
             d_start = random_design(spec, rng)          # lines 10-11
@@ -203,6 +260,7 @@ def stage_batch(
     max_local_steps: int = 10_000,
     forest_kwargs: dict | None = None,
     forest_backend: str | None = None,
+    meta_backend: str = "fused",
     max_evals: int | None = None,
     ev: Evaluator | None = None,
     ctx: PhvContext | None = None,
@@ -250,6 +308,7 @@ def stage_batch(
 
     if n_starts < 1:
         raise ValueError(f"n_starts must be >= 1, got {n_starts}")
+    check_meta_backend(meta_backend)
     rng = np.random.default_rng(seed)
     if ev is None:
         ev = Evaluator(spec, f, backend=backend)
@@ -331,11 +390,16 @@ def stage_batch(
                 xs = np.vstack([x_init, xs])
                 ys = np.concatenate([y_init, ys])
             m = RegressionForest(seed=seed + it, **fk).fit(xs, ys)
+            # One scorer per refit, shared by every chain's meta search
+            # (device-resident forest tensors transfer once, not K times).
+            sc = (MetaScorer(spec, m, backend=meta_backend)
+                  if meta_backend != "host" else None)
             new_starts = []
             for res in results:
                 d_restart = _meta_greedy(
                     spec, m, res.d_last, rng,
                     n_swaps=n_swaps, n_link_moves=n_link_moves,
+                    backend=meta_backend, scorer=sc,
                 )
                 if d_restart.key() == res.d_last.key():
                     new_starts.append(random_design(spec, rng))  # lines 10-11

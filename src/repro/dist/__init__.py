@@ -58,6 +58,7 @@ def _stage_config_json(cfg) -> dict:
         "max_local_steps": cfg.max_local_steps,
         "forest_kwargs": cfg.forest_kwargs,
         "forest_backend": cfg.forest_backend,
+        "meta_backend": cfg.meta_backend,
     }
 
 

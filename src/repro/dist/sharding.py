@@ -1,0 +1,235 @@
+"""Logical-axis sharding policy for the launch/train/serve substrate.
+
+Models annotate activations with *logical* axis names
+(``pshard(x, ("batch", "seq", "embed"))``); this module owns the single
+mapping from those names to physical mesh axes, plus the parameter / batch /
+KV-cache PartitionSpec builders every jit entry point shards with.
+
+Everything funnels through :func:`_fit`, which enforces the two invariants a
+GSPMD spec must satisfy: a mesh axis is used at most once per spec, and a
+tensor dim is only sharded when the mesh-axis product divides it (non-divisible
+dims silently fall back to replication — the whisper vocab of 51865 shards
+over nothing on a 16-wide model axis, by design, not by crash).
+
+The module is import-cheap: no jax device state is touched at import time
+(``repro.dist`` worker processes import this package before configuring
+their backend).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: logical axis -> mesh axes tried in order (absent mesh axes are skipped).
+#: "batch" spans the full data-parallel extent (pod x data on the 2-pod
+#: mesh); tensor-parallel logical axes all map to "model".
+_DEFAULT_LOGICAL = (
+    ("batch", ("pod", "data")),
+    ("seq", ()),
+    ("embed", ()),
+    ("mlp", ("model",)),
+    ("vocab", ("model",)),
+    ("heads", ("model",)),
+    ("kv_heads", ("model",)),
+    ("heads_flat", ("model",)),
+    ("experts", ("model",)),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """One sharding policy = microbatching + FSDP axes + the logical map."""
+
+    microbatches: int = 1
+    grad_compress: bool = False
+    #: mesh axes parameters are FSDP-sharded over ("" = replicate weights).
+    fsdp_axes: tuple = ("data",)
+    #: ((logical_name, (mesh_axis, ...)), ...) — override via with_logical().
+    logical: tuple = _DEFAULT_LOGICAL
+
+    def axes_for(self, name) -> tuple:
+        if name is None:
+            return ()
+        for key, axes in self.logical:
+            if key == name:
+                return tuple(axes)
+        return ()
+
+    def with_logical(self, **overrides) -> "Policy":
+        """Replace logical-axis mappings, e.g. ``with_logical(seq=("model",))``
+        for Megatron-style sequence sharding or ``with_logical(experts=())``
+        to replicate expert weights."""
+        table = dict(self.logical)
+        for key, axes in overrides.items():
+            table[key] = tuple(axes)
+        return dataclasses.replace(self, logical=tuple(table.items()))
+
+
+def default_policy_for(kind: str) -> Policy:
+    """Registry defaults per step kind (the dry-run / roofline cells)."""
+    if kind == "train":
+        return Policy(microbatches=16)
+    # Inference: FSDP would all-gather weights every step — replicate
+    # instead and lean on TP; no microbatching.
+    return Policy(microbatches=1, fsdp_axes=())
+
+
+# --------------------------------------------------------------------- fit
+def _fit(mesh: Mesh, dim: int, axes, used: set) -> tuple:
+    """Longest usable prefix of ``axes`` that legally shards a dim of size
+    ``dim``: drops axes missing from the mesh or already used in this spec,
+    then backs off from the right until the axis-size product divides
+    ``dim``. Returns () (replicate) when nothing fits. Mutates ``used``."""
+    avail = [a for a in axes if a in mesh.shape and a not in used]
+    while avail:
+        prod = 1
+        for a in avail:
+            prod *= mesh.shape[a]
+        if prod > 1 and dim % prod == 0:
+            used.update(avail)
+            return tuple(avail)
+        avail.pop()
+    return ()
+
+
+def _entry(axes: tuple):
+    """PartitionSpec entry for a fitted axis tuple."""
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_from_logical(mesh: Mesh, policy: Policy, shape, logical) -> P:
+    """Build a PartitionSpec for ``shape`` from per-dim logical names."""
+    used: set = set()
+    parts = [_entry(_fit(mesh, shape[i], policy.axes_for(name), used))
+             for i, name in enumerate(logical)]
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def named(mesh: Mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (jit in/out_shardings)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def activation_shard_fn(mesh: Mesh, policy: Policy):
+    """The callback installed via ``models.common.activation_sharding``:
+    maps a logical annotation to ``with_sharding_constraint``."""
+
+    def shard(x, logical):
+        spec = spec_from_logical(mesh, policy, x.shape, logical)
+        if not any(spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+# ----------------------------------------------------------------- params
+#: weight-name -> (tp_logical, tp_dim_from_right). TP goes on the dim the
+#: matmul contracts *out of* (column-parallel for up-projections, row-
+#: parallel for down-projections), so forward needs no weight collectives
+#: beyond the FSDP all-gather.
+_TP_RULES = {
+    "wq": ("heads_flat", 1), "wk": ("kv_heads", 1), "wv": ("kv_heads", 1),
+    "wo": ("heads_flat", 2),
+    "w1": ("mlp", 1), "w3": ("mlp", 1), "w2": ("mlp", 2),
+    "in_proj": ("heads_flat", 1), "out_proj": ("heads_flat", 2),
+    "embed": ("vocab", 2), "head": ("vocab", 1),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _param_spec(mesh: Mesh, policy: Policy, path, leaf) -> P:
+    name = _leaf_name(path)
+    shape = leaf.shape
+    nd = len(shape)
+    stacked = any(getattr(e, "key", None) == "layers" for e in path)
+    parts = [None] * nd
+    used: set = set()
+    if nd >= 2:
+        rule = _TP_RULES.get(name)
+        # MoE expert weights carry a leading experts dim: (e, d, f) or
+        # stacked (L, e, d, f) — EP-shard the experts dim instead of TP.
+        if rule and name in ("w1", "w2", "w3") and nd - int(stacked) == 3:
+            e_dim = nd - 3
+            parts[e_dim] = _entry(
+                _fit(mesh, shape[e_dim], policy.axes_for("experts"), used))
+        elif rule:
+            logical, from_right = rule
+            d = nd - from_right
+            if d >= int(stacked):  # never shard the scan-stacked layer dim
+                parts[d] = _entry(
+                    _fit(mesh, shape[d], policy.axes_for(logical), used))
+        # FSDP: shard the largest still-replicated non-layer dim over the
+        # data axes (ZeRO-3 style; all-gathered around use).
+        if policy.fsdp_axes:
+            cand = [i for i in range(int(stacked), nd) if parts[i] is None]
+            cand.sort(key=lambda i: -shape[i])
+            for i in cand:
+                axes = _fit(mesh, shape[i], policy.fsdp_axes, used)
+                if axes:
+                    parts[i] = _entry(axes)
+                    break
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_specs(mesh: Mesh, policy: Policy, params_like):
+    """PartitionSpec tree for a parameter pytree (abstract or concrete)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(mesh, policy, path, leaf), params_like)
+
+
+# ------------------------------------------------------------------ batch
+def _batch_spec(mesh: Mesh, policy: Policy, leaf) -> P:
+    shape = leaf.shape
+    if not shape:
+        return P()
+    logical = ["batch"] + ["seq" if i == 1 else None
+                           for i in range(1, len(shape))]
+    return spec_from_logical(mesh, policy, shape, logical)
+
+
+def batch_specs(mesh: Mesh, policy: Policy, batch_like):
+    """Batch pytree specs: dim 0 over the data extent, dim 1 over the seq
+    axes (replicated unless the policy opts into sequence sharding)."""
+    return jax.tree.map(lambda leaf: _batch_spec(mesh, policy, leaf),
+                        batch_like)
+
+
+def cache_specs(mesh: Mesh, policy: Policy, cfg, cache_like):
+    """KV/SSM cache specs: leaves are layer-stacked ``(L, B, ...)`` — layer
+    dim replicated (it is lax.scan's carry axis), batch over the data
+    extent, and the kv-head dim (dim -2 of 4+-d attention caches) over the
+    tensor-parallel axes."""
+
+    def spec(leaf) -> P:
+        shape = leaf.shape
+        nd = len(shape)
+        if nd < 2:
+            return P()  # pos scalar etc.
+        logical = [None] * nd
+        logical[1] = "batch"
+        if nd >= 4:
+            logical[nd - 2] = "kv_heads"
+        return spec_from_logical(mesh, policy, shape, logical)
+
+    return jax.tree.map(spec, cache_like)

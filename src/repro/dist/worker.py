@@ -23,6 +23,14 @@ Executor matrix (DESIGN.md §8):
     ``jax.default_device(dev)`` so its XLA dispatches land on its own
     accelerator. On a single-device host this degrades to ``serial``
     (documented, not hidden).
+``spmd``
+    Shards run in order, but each shard's evaluator executes its chain
+    batches as ONE multi-device ``shard_map`` program over every visible
+    device (``repro.core.evaluate.spmd_scope``) — data-parallel over the
+    candidate batch instead of parallel over shards. Numerically identical
+    to ``serial`` (batch sharding splits independent per-design programs);
+    on a single-device host it degrades to ``serial`` plus the shard_map
+    partitioning overhead.
 
 Failures are collected, not raised: :func:`execute_shards` returns
 ``(results, failures)`` and the coordinator merges the survivors,
@@ -45,7 +53,7 @@ from concurrent.futures import ProcessPoolExecutor
 from repro.dist.faults import call_with_faults
 from repro.noc.api import Budget, NocProblem, RunResult
 
-EXECUTORS = ("serial", "process", "jax")
+EXECUTORS = ("serial", "process", "jax", "spmd")
 
 
 # --------------------------------------------------------------------------
@@ -219,6 +227,7 @@ def run_shard_round(problem_json: dict, budget_json: dict, seed: int,
             forest_backend=(cfg.forest_backend
                             if cfg.forest_backend is not None
                             else problem.forest_backend),
+            meta_backend=cfg.meta_backend,
             max_evals=budget.max_evals, ev=guarded, ctx=ctx, history=history,
             starts=starts, train_init=train_init, global_init=global_init,
             checkpoint_restarts=True,
@@ -470,10 +479,18 @@ def execute_shards(fn, arg_tuples: list[tuple], executor: str = "serial",
 
 def _execute_inline(fn, arg_tuples, executor, meta, timeout_s, max_retries,
                     backoff_s, retry_args, injector, validate):
-    """serial/jax: in-process dispatch with an inline retry loop."""
+    """serial/jax/spmd: in-process dispatch with an inline retry loop."""
     if executor == "jax":
         import jax
         devices = jax.devices()
+    spmd_cm = None
+    if executor == "spmd":
+        from repro.core.evaluate import make_spmd_mesh, spmd_scope
+
+        mesh = make_spmd_mesh()
+        # Evaluators read the ambient mesh at construction, which happens
+        # inside fn (problem.evaluator()) — so the scope must wrap dispatch.
+        spmd_cm = lambda: spmd_scope(mesh)
     results: dict[int, dict] = {}
     failures: dict[int, list[dict]] = {}
     for i, orig_args in enumerate(arg_tuples):
@@ -491,6 +508,10 @@ def _execute_inline(fn, arg_tuples, executor, meta, timeout_s, max_retries,
             try:
                 if executor == "jax":
                     with jax.default_device(devices[i % len(devices)]):
+                        payload = call_with_faults(
+                            injector, wid, rnd, attempt, fn, args)
+                elif spmd_cm is not None:
+                    with spmd_cm():
                         payload = call_with_faults(
                             injector, wid, rnd, attempt, fn, args)
                 else:

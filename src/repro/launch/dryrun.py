@@ -116,6 +116,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         t2 = time.perf_counter()
 
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax: list of one dict
+            cost = cost[0] if cost else {}
         text = compiled.as_text()
         coll = hlo.parse_collectives(text)
         rec.update(

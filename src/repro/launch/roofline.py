@@ -109,6 +109,8 @@ def _measure(arch: str, shape_name: str, multi_pod: bool,
         lowered, _ = build_lowered(arch, shape_name, mesh, policy, over)
         compiled = lowered.compile()
         c = compiled.cost_analysis() or {}
+        if isinstance(c, (list, tuple)):  # older jax: list of one dict
+            c = c[0] if c else {}
         coll = hlo.parse_collectives(compiled.as_text())
         return (float(c.get("flops", 0)), float(c.get("bytes accessed", 0)),
                 hlo.wire_bytes(coll))

@@ -178,10 +178,16 @@ class NocProblem:
     def mesh(self) -> Design:
         return self.spec.mesh_design()
 
-    def context(self, ev: Evaluator) -> PhvContext:
+    def context(self, ev: Evaluator, *,
+                phv_backend: str = "host") -> PhvContext:
         """PHV context normalized by the mesh design (costs one evaluation
-        — the same construction every legacy driver used)."""
-        return PhvContext(ev(self.mesh()), CASES[self.case])
+        — the same construction every legacy driver used).
+
+        ``phv_backend`` is a context knob (not a problem field — problems
+        hash by canonical JSON): ``"jnp"`` opts the batched chain-step
+        scorer into the f32 device twin (see :class:`PhvContext`)."""
+        return PhvContext(ev(self.mesh()), CASES[self.case],
+                          phv_backend=phv_backend)
 
     @property
     def obj_idx(self) -> tuple[int, ...]:

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core.amosa import amosa
 from repro.core.forest import check_forest_backend
+from repro.core.fused import check_meta_backend
 from repro.core.local_search import ParetoSet, local_search_batch
 from repro.core.nsga2 import nsga2
 from repro.core.pcbb import pcbb
@@ -44,7 +45,10 @@ class StageConfig:
     """MOO-STAGE (Alg. 2) knobs — see :func:`repro.core.stage.moo_stage`.
 
     ``forest_backend`` overrides the problem's surrogate inference backend
-    (``None`` inherits ``NocProblem.forest_backend``)."""
+    (``None`` inherits ``NocProblem.forest_backend``); ``meta_backend``
+    selects the meta-search scoring path (core.fused.META_BACKENDS —
+    ``"fused"`` is the one-dispatch-per-step device pipeline,
+    ``"host"`` the legacy host-featurizing loop)."""
 
     iters_max: int = 12
     n_swaps: int = 24
@@ -52,11 +56,13 @@ class StageConfig:
     max_local_steps: int = 10_000
     forest_kwargs: dict | None = None
     forest_backend: str | None = None
+    meta_backend: str = "fused"
 
     def __post_init__(self):
         # Fail at config construction, not at the first surrogate refit
         # after the initial evaluation budget has already been spent.
         check_forest_backend(self.forest_backend, allow_none=True)
+        check_meta_backend(self.meta_backend)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,7 +70,8 @@ class StageBatchConfig:
     """Multi-start MOO-STAGE — see :func:`repro.core.stage.stage_batch`.
 
     ``forest_backend`` overrides the problem's surrogate inference backend
-    (``None`` inherits ``NocProblem.forest_backend``)."""
+    (``None`` inherits ``NocProblem.forest_backend``); ``meta_backend``
+    selects the meta-search scoring path (core.fused.META_BACKENDS)."""
 
     n_starts: int = 4
     iters_max: int = 12
@@ -73,9 +80,11 @@ class StageBatchConfig:
     max_local_steps: int = 10_000
     forest_kwargs: dict | None = None
     forest_backend: str | None = None
+    meta_backend: str = "fused"
 
     def __post_init__(self):
         check_forest_backend(self.forest_backend, allow_none=True)
+        check_meta_backend(self.meta_backend)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,7 +94,9 @@ class StageDistConfig:
     ``n_workers`` shards the global budget (remainder-exact; per-worker
     seeds spawned from the root seed); ``executor`` picks where shards
     run (``"serial"`` in-process, ``"process"`` spawn-based
-    ``ProcessPoolExecutor``, ``"jax"`` one shard per JAX device);
+    ``ProcessPoolExecutor``, ``"jax"`` one shard per JAX device,
+    ``"spmd"`` in-order shards whose evaluator batches run as one
+    multi-device shard_map program — repro.core.evaluate.spmd_scope);
     ``sync_every`` > 0 pools surrogate training rows across workers every
     that many STAGE iterations (0 = fully independent workers). The
     remaining knobs configure each worker's ``stage_batch`` run
@@ -112,6 +123,7 @@ class StageDistConfig:
     max_local_steps: int = 10_000
     forest_kwargs: dict | None = None
     forest_backend: str | None = None
+    meta_backend: str = "fused"
     shard_timeout_s: float | None = None
     max_retries: int = 1
     retry_backoff_s: float = 0.0
@@ -130,6 +142,7 @@ class StageDistConfig:
                 f"sync_every must be >= 0, got {self.sync_every}")
         check_executor(self.executor)
         check_forest_backend(self.forest_backend, allow_none=True)
+        check_meta_backend(self.meta_backend)
         if self.shard_timeout_s is not None and self.shard_timeout_s <= 0:
             raise ValueError(f"shard_timeout_s must be > 0 or None, "
                              f"got {self.shard_timeout_s}")
@@ -270,6 +283,7 @@ def _run_stage(problem: NocProblem, budget: Budget, cfg: StageConfig,
         forest_kwargs=cfg.forest_kwargs,
         forest_backend=(cfg.forest_backend if cfg.forest_backend is not None
                         else problem.forest_backend),
+        meta_backend=cfg.meta_backend,
         history=history, max_evals=budget.max_evals,
     )
     return res.global_set, {
@@ -290,6 +304,7 @@ def _run_stage_batch(problem: NocProblem, budget: Budget,
         max_local_steps=cfg.max_local_steps, forest_kwargs=cfg.forest_kwargs,
         forest_backend=(cfg.forest_backend if cfg.forest_backend is not None
                         else problem.forest_backend),
+        meta_backend=cfg.meta_backend,
         max_evals=budget.max_evals, ev=ev, ctx=ctx, history=history,
     )
     return res.global_set, {

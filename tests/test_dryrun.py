@@ -44,12 +44,6 @@ def test_parse_ignores_non_collectives():
 def test_dryrun_cell_subprocess(tmp_path):
     """One real cell on both production meshes, via `python -m` exactly as
     the deliverable specifies. whisper-base compiles fastest."""
-    # repro.launch.dryrun imports repro.dist.sharding in the subprocess.
-    # repro.dist itself exists (distributed multi-start MOO-STAGE, PR 5);
-    # skip on the still-unbuilt submodule (tests/test_dist.py audits this).
-    pytest.importorskip(
-        "repro.dist.sharding",
-        reason="repro.dist.sharding (sharding substrate) not built yet")
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     proc = subprocess.run(

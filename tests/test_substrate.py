@@ -9,13 +9,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# repro.dist exists now (distributed multi-start MOO-STAGE, PR 5) but the
-# sharding-substrate module these tests exercise is still unbuilt — skip on
-# the specific submodule, not the package (tests/test_dist.py audits this).
-pytest.importorskip(
-    "repro.dist.sharding",
-    reason="repro.dist.sharding (sharding substrate) not built yet")
-
 from repro.ckpt import CheckpointManager
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticLM
