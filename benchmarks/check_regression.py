@@ -49,6 +49,8 @@ TRACKED = (
     "serve_8req_4w_us",
     "traffic_model_gen_us",
     "agnostic_llm_cross_us",
+    "apsp_delta_256_us",
+    "pareto_insert_1k_us",
 )
 
 

@@ -323,6 +323,64 @@ def main(reduced: bool = False) -> None:
         f"llm_on_paper_avg=+{s['llm_on_paper_avg']*100:.1f}%;tiny")
     bench["agnostic_llm_cross_us"] = t.dt * 1e6
 
+    # Incremental routing-table deltas at the spec_large tier (DESIGN.md
+    # §13): per-link-move table update vs the full host APSP rebuild the
+    # dense path would pay. The acceptance floor for the delta machinery
+    # is >= 10x on this row.
+    from repro.core import routing, spec_large
+    from repro.core.objectives import design_cost_np
+
+    lspec = spec_large()
+    lcost = design_cost_np(lspec, lspec.mesh_design().adj)
+    lit = routing.apsp_iters(lspec.n_tiles)
+    tab = routing.host_tables(lcost, lit)
+    t_full = _min_of(lambda: routing.host_tables(lcost, lit), n=2)
+    drng = np.random.default_rng(5)
+    dmv = sample_neighbor_moves(lspec, lspec.mesh_design(), drng,
+                                n_swaps=0, n_link_moves=8)
+    w_hop = float(np.float32(lspec.router_stages))
+
+    def one_delta(k):
+        add = (int(dmv.add[k, 0]), int(dmv.add[k, 1]))
+        w = w_hop + float(np.float32(lspec.link_delay[add]))
+        r = routing.delta_link_move(
+            tab, (int(dmv.rem[k, 0]), int(dmv.rem[k, 1])), add, w)
+        assert r is not None  # fallback would poison the timing
+        return r
+
+    one_delta(0)  # warm (numpy buffers, eps cache)
+    times = []
+    for k in range(dmv.rem.shape[0]):
+        with Timer() as t:
+            one_delta(k)
+        times.append(t.dt)
+    t_delta = float(np.median(times))
+    row("apsp_delta_256", t_delta * 1e6,
+        f"median_of_{len(times)};full_rebuild={t_full*1e6:.0f}us;"
+        f"speedup={t_full/t_delta:.0f}x;n=256")
+    bench["apsp_delta_256_us"] = t_delta * 1e6
+    bench["apsp_full_256_us"] = t_full * 1e6
+    bench["apsp_delta_speedup_256"] = t_full / t_delta
+
+    # Incremental Pareto-front maintenance: 1k 4-objective inserts into
+    # the sorted-front archive (the local_search/stage union path).
+    from repro.core.pareto import ParetoArchive
+
+    prng = np.random.default_rng(6)
+    stream = prng.uniform(size=(1000, 4))
+
+    def insert_1k():
+        arch = ParetoArchive(4)
+        for i, p in enumerate(stream):
+            arch.insert(p, tag=i)
+        return arch
+
+    front = len(insert_1k())  # warm
+    t_ins = _min_of(insert_1k, n=3)
+    row("pareto_insert_1k", t_ins / 1000 * 1e6,
+        f"us_per_insert;final_front={front};n_obj=4")
+    bench["pareto_insert_1k_us"] = t_ins / 1000 * 1e6
+
     out = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                        "BENCH_netsim.json")
     with open(out, "w") as fh:

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
+from collections import OrderedDict
 from functools import partial
 
 import jax
@@ -24,9 +25,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import routing
-from .objectives import (N_OBJ, SpecConsts, design_cost, evaluate_with_tables,
-                         make_consts)
-from .problem import Design, SystemSpec
+from .objectives import (N_OBJ, SpecConsts, design_cost, design_cost_np,
+                         evaluate_with_tables, make_consts)
+from .problem import Design, NeighborMoves, SystemSpec
+
+DELTA_MODES = ("auto", "on", "off")
+
+#: ``delta="auto"`` switches move evaluation to incremental host tables at
+#: this tile count. Below it (all paper specs: 8-64 tiles) the dense jitted
+#: batch is faster than any host round-trip and stays the only path.
+DELTA_AUTO_MIN_TILES = 128
+
+#: Transient budget for one batched-APSP dispatch — bounds the (B, N, N, N)
+#: (or k-blocked) broadcast by shrinking the chunk size as N grows.
+_BATCH_BUDGET_BYTES = 512 << 20
 
 #: ambient SPMD mesh — set via :func:`spmd_scope`; Evaluators constructed
 #: inside the scope run their batch pipeline as one shard_map program over
@@ -70,11 +82,22 @@ class Evaluator:
 
     def __init__(self, spec: SystemSpec, f: np.ndarray, *,
                  backend: str = "auto", interpret: bool = False,
-                 max_batch: int | None = 256):
+                 max_batch: int | None = 256, delta: str = "auto",
+                 table_cache_bytes: int = 256 << 20):
+        if delta not in DELTA_MODES:
+            raise ValueError(f"delta must be one of {DELTA_MODES}, got {delta!r}")
         self.spec = spec
         self.backend = routing.resolve_backend(backend)
         self.interpret = interpret
-        self.max_batch = max_batch  # chunk bound for the (B, N, N, N) APSP broadcast
+        n = spec.n_tiles
+        if max_batch is not None:
+            # Chunk bound for the batched-APSP transient: at 64 tiles a
+            # 256-design chunk broadcasts 256 MiB; at 256+ tiles the same
+            # chunk would be gigabytes, so the bound shrinks with N.
+            per = 4 * n * n * (n if n <= routing.DENSE_NMAX
+                               else routing._pow2_block(n))
+            max_batch = max(1, min(max_batch, _BATCH_BUDGET_BYTES // per))
+        self.max_batch = max_batch
         self.consts: SpecConsts = make_consts(spec)
         self.f = jnp.asarray(f, jnp.float32)
         self._cost_fn = jax.jit(jax.vmap(partial(design_cost, self.consts)))
@@ -85,6 +108,20 @@ class Evaluator:
         self.mesh = _SPMD_MESH.get()
         self._spmd_fn = (self._build_spmd_fn() if self.mesh is not None
                          else None)
+        # Incremental move evaluation (batch_moves): swap candidates reuse
+        # the base design's tables verbatim (adjacency is slot-keyed, a swap
+        # only permutes cores); link moves get an O(N²) table delta
+        # (routing.delta_link_move) instead of a full APSP. Forced off under
+        # SPMD — the shard_map pipeline recomputes tables on device.
+        self.delta_mode = delta
+        self.delta_on = (self._spmd_fn is None
+                         and (delta == "on" or (delta == "auto"
+                              and n >= DELTA_AUTO_MIN_TILES)))
+        self._tab_cache: OrderedDict[bytes, routing.HostTables] = OrderedDict()
+        self._tab_cache_nbytes = 0
+        self._tab_cache_max_bytes = int(table_cache_bytes)
+        self.delta_stats = {"swap": 0, "delta": 0, "fallback": 0,
+                            "table_hits": 0, "table_misses": 0}
         self.n_evals = 0  # evaluation counter (search-cost accounting)
         self.n_calls = 0  # XLA dispatches (batching-efficiency accounting)
 
@@ -156,6 +193,133 @@ class Evaluator:
         self.n_calls += 1
         aux = {k: np.asarray(v[:b]) for k, v in aux.items()}
         return np.asarray(objs[:b], dtype=np.float64), aux
+
+    # -------------------------------------------------------------- moves
+    def batch_moves(self, moves) -> np.ndarray:
+        """(B, 5) objective rows for one or more :class:`NeighborMoves`
+        neighborhoods (rows concatenate in neighborhood order, candidates in
+        ``materialize`` order: swaps, then link moves).
+
+        With deltas off this is exactly ``batch(materialize_all())`` — same
+        numerics, same dispatch/eval accounting. With deltas on, routing
+        tables come from the host cache: swaps reuse the base tables
+        unchanged, link moves pay one O(N²) incremental update
+        (full host recompute as fallback), and only the objective walk runs
+        on device. Both paths are bit-equal — see routing's host-mirror
+        exactness note."""
+        mvs = [moves] if isinstance(moves, NeighborMoves) else list(moves)
+        mvs = [m for m in mvs if len(m)]
+        if not mvs:
+            return np.zeros((0, N_OBJ))
+        if not self.delta_on:
+            return self.batch([d for m in mvs for d in m.materialize_all()])
+        perms, adjs, dists, nhs = [], [], [], []
+        for mv in mvs:
+            t0 = self._host_tables(mv.base)
+            for s in range(mv.swaps.shape[0]):
+                a, b = int(mv.swaps[s, 0]), int(mv.swaps[s, 1])
+                p = mv.base.perm.copy()
+                p[a], p[b] = p[b], p[a]
+                perms.append(p)
+                adjs.append(mv.base.adj)
+                dists.append(t0.dist)
+                nhs.append(t0.nh)
+                self.delta_stats["swap"] += 1
+            for k in range(mv.rem.shape[0]):
+                rem = (int(mv.rem[k, 0]), int(mv.rem[k, 1]))
+                add = (int(mv.add[k, 0]), int(mv.add[k, 1]))
+                t = self._moved_tables(t0, rem, add)
+                adj2 = mv.base.adj.copy()
+                adj2[rem[0], rem[1]] = adj2[rem[1], rem[0]] = False
+                adj2[add[0], add[1]] = adj2[add[1], add[0]] = True
+                perms.append(mv.base.perm)
+                adjs.append(adj2)
+                dists.append(t.dist)
+                nhs.append(t.nh)
+        return self._eval_from_tables(perms, adjs, dists, nhs)
+
+    def note_accept(self, mv: NeighborMoves, j: int) -> None:
+        """Tell the evaluator candidate ``j`` of ``mv`` was accepted: cache
+        the winner's host tables (one delta from the already-cached base) so
+        the next step's neighborhood starts from a cache hit. No-op when
+        deltas are off or the winner is a swap (same adjacency)."""
+        if not self.delta_on:
+            return
+        s = mv.swaps.shape[0]
+        if j < s:
+            return
+        k = j - s
+        rem = (int(mv.rem[k, 0]), int(mv.rem[k, 1]))
+        add = (int(mv.add[k, 0]), int(mv.add[k, 1]))
+        adj2 = mv.base.adj.copy()
+        adj2[rem[0], rem[1]] = adj2[rem[1], rem[0]] = False
+        adj2[add[0], add[1]] = adj2[add[1], add[0]] = True
+        key = np.packbits(adj2).tobytes()
+        if key in self._tab_cache:
+            self._tab_cache.move_to_end(key)
+            return
+        t = self._moved_tables(self._host_tables(mv.base), rem, add)
+        self._tab_put(key, t)
+
+    def _host_tables(self, base: Design) -> routing.HostTables:
+        key = np.packbits(base.adj).tobytes()
+        t = self._tab_cache.get(key)
+        if t is not None:
+            self._tab_cache.move_to_end(key)
+            self.delta_stats["table_hits"] += 1
+            return t
+        self.delta_stats["table_misses"] += 1
+        t = routing.host_tables(design_cost_np(self.spec, base.adj),
+                                self.consts.apsp_iters)
+        self._tab_put(key, t)
+        return t
+
+    def _moved_tables(self, t0: routing.HostTables, rem, add
+                      ) -> routing.HostTables:
+        w = (np.float32(self.spec.router_stages)
+             + np.float32(self.spec.link_delay[add[0], add[1]]))
+        t = routing.delta_link_move(t0, rem, add, w)
+        if t is None:
+            self.delta_stats["fallback"] += 1
+            cost2 = t0.cost.copy()
+            cost2[rem[0], rem[1]] = cost2[rem[1], rem[0]] = np.float32(routing.INF)
+            cost2[add[0], add[1]] = cost2[add[1], add[0]] = w
+            return routing.host_tables(cost2, self.consts.apsp_iters)
+        self.delta_stats["delta"] += 1
+        return t
+
+    def _tab_put(self, key: bytes, t: routing.HostTables) -> None:
+        old = self._tab_cache.pop(key, None)
+        if old is not None:
+            self._tab_cache_nbytes -= old.nbytes
+        self._tab_cache[key] = t
+        self._tab_cache_nbytes += t.nbytes
+        while (self._tab_cache_nbytes > self._tab_cache_max_bytes
+               and len(self._tab_cache) > 1):
+            _, evicted = self._tab_cache.popitem(last=False)
+            self._tab_cache_nbytes -= evicted.nbytes
+
+    def _eval_from_tables(self, perms, adjs, dists, nhs) -> np.ndarray:
+        """Dispatch the objective walk over candidates with precomputed
+        routing tables — chunked by ``max_batch``, padded to the next power
+        of two (the same shape-cache discipline as ``batch_aux``); the same
+        eval/dispatch counters apply."""
+        out = []
+        step = self.max_batch if self.max_batch is not None else len(perms)
+        for i in range(0, len(perms), step):
+            b = len(perms[i:i + step])
+            pad = 1 << max(0, (b - 1).bit_length())
+            sl = slice(i, i + b)
+            tail = pad - b
+            pj = jnp.asarray(np.stack(perms[sl] + [perms[i + b - 1]] * tail))
+            aj = jnp.asarray(np.stack(adjs[sl] + [adjs[i + b - 1]] * tail))
+            dj = jnp.asarray(np.stack(dists[sl] + [dists[i + b - 1]] * tail))
+            nj = jnp.asarray(np.stack(nhs[sl] + [nhs[i + b - 1]] * tail))
+            objs, _ = self._eval_fn(pj, aj, self.f, dj, nj)
+            self.n_evals += b
+            self.n_calls += 1
+            out.append(np.asarray(objs[:b], dtype=np.float64))
+        return np.concatenate(out, axis=0)
 
     # ---------------------------------------------------------------- EDP
     def edp(self, d: Design) -> float:

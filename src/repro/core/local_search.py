@@ -20,8 +20,8 @@ import time
 import numpy as np
 
 from .evaluate import Evaluator
-from .pareto import PhvContext, pareto_mask
-from .problem import Design, SystemSpec, sample_neighbors
+from .pareto import ParetoArchive, PhvContext
+from .problem import Design, SystemSpec, sample_neighbor_moves
 
 
 @dataclasses.dataclass
@@ -41,10 +41,30 @@ class ParetoSet:
 
     def merged_with(self, designs: list[Design], objs: np.ndarray,
                     obj_idx) -> "ParetoSet":
+        """Pareto union with new (design, objective-row) pairs.
+
+        Incremental: ``self`` is by construction an already-non-dominated,
+        deduplicated front (every ParetoSet is produced by a previous merge
+        under the same ``obj_idx``), so it seeds a :class:`ParetoArchive`
+        unchecked and only the *new* rows pay an O(front·k) insertion each
+        — no O(n²·k) dominance cube. Output rows keep stacked order
+        (surviving old rows, then accepted new rows), byte-identical to the
+        historical ``pareto_mask`` implementation."""
         alld = self.designs + list(designs)
-        allo = np.vstack([self.objs, np.atleast_2d(objs)]) if alld else self.objs
-        mask = pareto_mask(allo[:, list(obj_idx)])
-        return ParetoSet([d for d, m in zip(alld, mask) if m], allo[mask])
+        if not alld:
+            return ParetoSet.empty()
+        allo = np.vstack([self.objs, np.atleast_2d(objs)])
+        sub = allo[:, list(obj_idx)]
+        n_old = len(self.designs)
+        arch = ParetoArchive.from_front(sub[:n_old], tags=range(n_old))
+        keep = np.zeros(len(alld), dtype=bool)
+        keep[:n_old] = True
+        for i in range(n_old, len(alld)):
+            ok, evicted = arch.insert(sub[i], tag=i)
+            keep[i] = ok
+            for t in evicted:
+                keep[t] = False
+        return ParetoSet([d for d, m in zip(alld, keep) if m], allo[keep])
 
     @staticmethod
     def canonical_union(sets: "list[ParetoSet]", obj_idx) -> "ParetoSet":
@@ -68,8 +88,15 @@ class ParetoSet:
         order = sorted(pairs)
         designs = [pairs[k][0] for k in order]
         objs = np.stack([pairs[k][1] for k in order])
-        mask = pareto_mask(objs[:, list(obj_idx)])
-        return ParetoSet([d for d, m in zip(designs, mask) if m], objs[mask])
+        sub = objs[:, list(obj_idx)]
+        arch = ParetoArchive(sub.shape[1])
+        keep = np.zeros(len(order), dtype=bool)
+        for i in range(len(order)):
+            ok, evicted = arch.insert(sub[i], tag=i)
+            keep[i] = ok
+            for t in evicted:
+                keep[t] = False
+        return ParetoSet([d for d, m in zip(designs, keep) if m], objs[keep])
 
     def keys(self) -> set[bytes]:
         return {d.key() for d in self.designs}
@@ -157,26 +184,34 @@ def local_search_batch(
     for step in range(1, max_steps + 1):
         if max_evals is not None and ev.n_evals >= max_evals:
             break
-        cand_lists: list[list[Design]] = []
+        move_lists: list = []
         for ch in chains:
             if not ch.active:
-                cand_lists.append([])
+                move_lists.append(None)
                 continue
             ch.n_steps = step
-            cands = sample_neighbors(spec, ch.d_curr, rng, n_swaps, n_link_moves)
-            if not cands:
+            # Neighborhoods stay in move form: the evaluator can serve them
+            # from incremental table deltas (Evaluator.batch_moves — at
+            # spec_large scale each candidate costs an O(N²) table update
+            # instead of a full APSP), and only the per-chain winning move
+            # is ever materialized as a Design.
+            mv = sample_neighbor_moves(spec, ch.d_curr, rng, n_swaps,
+                                       n_link_moves)
+            if not len(mv):
                 ch.active = False
-            cand_lists.append(cands)
-        flat = [c for cl in cand_lists for c in cl]
-        if not flat:
-            break
-        objs_all = ev.batch(flat)
-        ofs = 0
-        for ch, cands in zip(chains, cand_lists):
-            if not cands:
+                move_lists.append(None)
                 continue
-            objs = objs_all[ofs:ofs + len(cands)]
-            ofs += len(cands)
+            move_lists.append(mv)
+        live = [mv for mv in move_lists if mv is not None]
+        if not live:
+            break
+        objs_all = ev.batch_moves(live)
+        ofs = 0
+        for ch, mv in zip(chains, move_lists):
+            if mv is None:
+                continue
+            objs = objs_all[ofs:ofs + len(mv)]
+            ofs += len(mv)
             if not ch.active:
                 continue
             # argmax_d PHV(S_local ∪ {d}) — Alg. 1 line 3, scored for the
@@ -186,7 +221,8 @@ def local_search_batch(
             if phvs[j] <= ch.phv + 1e-12:
                 ch.active = False
                 continue
-            ch.d_curr = cands[j]
+            ch.d_curr = mv.materialize(j)
+            ev.note_accept(mv, j)
             ch.s_local = ch.s_local.merged_with([ch.d_curr], objs[j][None],
                                                 ctx.obj_idx)
             ch.phv = phvs[j]
@@ -236,17 +272,20 @@ class SearchHistory:
         self.track_phv = track_phv
         self.rows: list[tuple[float, int, float, float]] = []
         self.best_edp = np.inf
-        self._pareto_objs = np.zeros((0, 5))
+        # Incremental best-so-far front: each record pays one O(front·k)
+        # archive insertion instead of rebuilding pareto_mask's O(n²·k)
+        # dominance cube over the accumulated rows. Tags carry the full
+        # 5-dim rows (the archive itself only sees the active subset).
+        self._arch = ParetoArchive(len(ctx.obj_idx))
 
     def record(self, ev: Evaluator, d: Design, objs: np.ndarray):
         edp = float(objs[2] * objs[3])  # cpu-llc latency x energy (analytic)
         self.best_edp = min(self.best_edp, edp)
         phv = np.nan
         if self.track_phv:
-            self._pareto_objs = np.vstack([self._pareto_objs, objs[None]])
-            mask = pareto_mask(self._pareto_objs[:, list(self.ctx.obj_idx)])
-            self._pareto_objs = self._pareto_objs[mask]
-            phv = self.ctx.phv(self._pareto_objs)
+            full = np.asarray(objs, dtype=np.float64).copy()
+            self._arch.insert(full[list(self.ctx.obj_idx)], tag=full)
+            phv = self.ctx.phv(np.stack(self._arch.tags))
         self.rows.append(
             (time.perf_counter() - self.t0, ev.n_evals, self.best_edp, phv)
         )

@@ -37,6 +37,7 @@ from collections import OrderedDict, deque
 
 import numpy as np
 
+from . import routing as _routing
 from .routing import apsp_iters
 from .problem import Design, SystemSpec
 
@@ -49,35 +50,36 @@ INF = 1.0e9
 # LRU cache of routing tables keyed by (spec, design identity). Saves the
 # per-injection-scale (and per-seed) APSP rebuild that used to dominate
 # ``saturation_throughput`` — the tables only depend on (spec, design).
+# Bounded by accumulated BYTES, not entry count: each entry holds O(N²)
+# arrays ((N, N) int64 edge_id alone is 128 MiB at 4096 tiles), so a
+# count-only bound silently grows unbounded with N. The count bound stays
+# as a backstop for tiny specs.
 _NH_CACHE: "OrderedDict[tuple, dict]" = OrderedDict()
 _NH_CACHE_MAX = 512
+_NH_CACHE_MAX_BYTES = 256 << 20
+_nh_cache_nbytes = 0
 
 
 def clear_caches() -> None:
     """Drop cached routing tables (tests / memory pressure)."""
+    global _nh_cache_nbytes
     _NH_CACHE.clear()
+    _nh_cache_nbytes = 0
 
 
 def _apsp_np(cost: np.ndarray, n_iters: int) -> np.ndarray:
-    """Batched (D, N, N) APSP by min-plus squaring, float32 NumPy.
-
-    Same operation sequence as routing.apsp's jnp path, so distances (and
-    the argmin tie-breaks below) match the device oracle bit-for-bit."""
-    d = cost
-    for _ in range(n_iters):
-        d = np.min(d[:, :, :, None] + d[:, None, :, :], axis=2)
-    return d
+    """Batched (D, N, N) APSP, float32 NumPy — delegates per design to
+    routing.apsp_np (k-blocked min-plus squaring): bit-equal to the device
+    oracle AND to the historical (D, N, N, N) broadcast here, without its
+    N³ transient (memory-safe at 1024+ tiles)."""
+    return np.stack([_routing.apsp_np(c, n_iters) for c in cost])
 
 
 def _tables_np(cost: np.ndarray, n_iters: int):
     """(dist, next_hop) for a (D, N, N) stack of hop-cost matrices."""
-    n = cost.shape[-1]
     dist = _apsp_np(cost, n_iters)
-    step = np.where(np.eye(n, dtype=bool)[None], np.float32(INF), cost)
-    scores = step[:, :, :, None] + dist[:, None, :, :]
-    nh = np.argmin(scores, axis=2).astype(np.int32)
-    eye = np.arange(n, dtype=np.int32)
-    nh[:, eye, eye] = eye
+    nh = np.stack([_routing.next_hop_np(c, dd)
+                   for c, dd in zip(cost, dist)])
     return dist, nh
 
 
@@ -107,9 +109,16 @@ def _design_tables(spec: SystemSpec, d: Design) -> dict:
     edge_id[ea, eb] = np.arange(ea.size)
     entry = dict(nh=nh, edge_b=eb.astype(np.int64), edge_id=edge_id,
                  n_edges=int(ea.size), reach=dist[0] < INF / 2)
+    entry["nbytes"] = sum(v.nbytes for v in entry.values()
+                          if isinstance(v, np.ndarray))
+    global _nh_cache_nbytes
     _NH_CACHE[key] = entry
-    while len(_NH_CACHE) > _NH_CACHE_MAX:
-        _NH_CACHE.popitem(last=False)
+    _nh_cache_nbytes += entry["nbytes"]
+    while len(_NH_CACHE) > 1 and (
+            len(_NH_CACHE) > _NH_CACHE_MAX
+            or _nh_cache_nbytes > _NH_CACHE_MAX_BYTES):
+        _, old = _NH_CACHE.popitem(last=False)
+        _nh_cache_nbytes -= old["nbytes"]
     return entry
 
 

@@ -99,6 +99,21 @@ def design_cost(c: SpecConsts, adj: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(jnp.eye(n, dtype=bool), 0.0, cost)
 
 
+def design_cost_np(spec: SystemSpec, adj: np.ndarray) -> np.ndarray:
+    """Host twin of :func:`design_cost` — bit-identical f32 hop costs (the
+    entries are small integers, exact in f32 on both paths). Shared by the
+    flit simulator's table builder and Evaluator's incremental delta path."""
+    n = spec.n_tiles
+    full_adj = np.asarray(adj, dtype=bool) | spec.vertical_adj
+    cost = np.where(
+        full_adj,
+        np.float32(spec.router_stages) + spec.link_delay.astype(np.float32),
+        np.float32(routing.INF),
+    ).astype(np.float32)
+    np.fill_diagonal(cost, np.float32(0.0))
+    return cost
+
+
 def evaluate_design(
     c: SpecConsts,
     perm: jnp.ndarray,   # (N,) slot -> core id

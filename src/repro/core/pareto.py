@@ -36,17 +36,138 @@ def pareto_mask(points: np.ndarray) -> np.ndarray:
     lt = np.any(pts[:, None, :] < pts[None, :, :], axis=-1)
     dom = le & lt  # dom[i, j]: i dominates j
     mask = ~dom.any(axis=0)
-    # Deduplicate exact ties (keep first).
+    # Deduplicate exact ties (keep first). Keys canonicalize signed zeros:
+    # -0.0 == 0.0 numerically (the rows co-dominate, neither knocks the
+    # other out above), but their byte patterns differ — without `+ 0.0`
+    # both would survive as "distinct" front points.
     if mask.sum() > 1:
         idx = np.flatnonzero(mask)
         seen: set[bytes] = set()
         for i in idx:
-            k = pts[i].tobytes()
+            k = (pts[i] + 0.0).tobytes()
             if k in seen:
                 mask[i] = False
             else:
                 seen.add(k)
     return mask
+
+
+class ParetoArchive:
+    """Incremental non-dominated archive (minimization, keep-first ties).
+
+    :func:`pareto_mask` rebuilds an O(n²·k) dominance cube on every union;
+    this archive maintains the front under *insertion*: each insert costs
+    one vectorized O(front·k) pass, pruned further by a sorted view of the
+    first objective (a dominator of ``p`` must satisfy ``q[0] <= p[0]``, a
+    point dominated by ``p`` must satisfy ``q[0] >= p[0]``, so only the
+    matching prefix/suffix of the sorted front is compared).
+
+    Semantics match ``pareto_mask`` exactly: a candidate equal to a
+    surviving member is rejected (keep-first dedup — signed zeros compare
+    equal numerically, so the archive never had the ``-0.0`` byte-key bug),
+    a dominated candidate is rejected, and an accepted candidate evicts the
+    members it dominates. Surviving points are reported in **insertion
+    order**, which is what makes :meth:`ParetoSet.merged_with
+    <repro.core.local_search.ParetoSet>` built on top byte-identical to the
+    historical stacked-``pareto_mask`` implementation.
+
+    ``tag`` is an arbitrary caller id carried with each point (a row index,
+    a design), returned by :meth:`insert` with the evicted members.
+    """
+
+    __slots__ = ("n_obj", "_pts", "_tags", "_k0s", "_sidx")
+
+    def __init__(self, n_obj: int):
+        self.n_obj = int(n_obj)
+        self._pts = np.zeros((0, self.n_obj), dtype=np.float64)
+        self._tags: list = []
+        # Sorted view: _k0s is pts[:, 0] sorted ascending; _sidx[r] is the
+        # row index (into _pts / _tags) at sorted position r.
+        self._k0s = np.zeros((0,), dtype=np.float64)
+        self._sidx = np.zeros((0,), dtype=np.int64)
+
+    def __len__(self) -> int:
+        return self._pts.shape[0]
+
+    @property
+    def points(self) -> np.ndarray:
+        """(m, k) front rows, in insertion order."""
+        return self._pts
+
+    @property
+    def tags(self) -> list:
+        """Caller tags, aligned with :attr:`points`."""
+        return self._tags
+
+    @classmethod
+    def from_front(cls, pts: np.ndarray, tags=None) -> "ParetoArchive":
+        """Seed from rows that are already a mutually non-dominated,
+        deduplicated front (e.g. a previous archive's output). The rows are
+        trusted — no pairwise checks are run."""
+        pts = np.atleast_2d(np.asarray(pts, dtype=np.float64)) + 0.0
+        arch = cls(pts.shape[-1])
+        if pts.size:
+            arch._pts = pts.copy()
+            arch._tags = (list(tags) if tags is not None
+                          else list(range(pts.shape[0])))
+            arch._sidx = np.argsort(pts[:, 0], kind="stable").astype(np.int64)
+            arch._k0s = pts[arch._sidx, 0]
+        return arch
+
+    def insert(self, p: np.ndarray, tag=None) -> tuple[bool, list]:
+        """Insert one point. Returns ``(accepted, evicted_tags)``:
+        ``accepted`` is False when ``p`` is dominated by (or equal to) a
+        member; ``evicted_tags`` lists the members ``p`` knocked out."""
+        p = np.asarray(p, dtype=np.float64).reshape(self.n_obj) + 0.0
+        m = self._pts.shape[0]
+        evicted: list = []
+        if m:
+            # Prefix (k0 <= p0): the only rows that can dominate/equal p.
+            hi = int(np.searchsorted(self._k0s, p[0], side="right"))
+            if hi:
+                pre = self._sidx[:hi]
+                if bool(np.all(self._pts[pre] <= p, axis=1).any()):
+                    return False, []
+            # Suffix (k0 >= p0): the only rows p can dominate.
+            lo = int(np.searchsorted(self._k0s, p[0], side="left"))
+            suf = self._sidx[lo:]
+            if suf.size:
+                out = suf[np.all(p <= self._pts[suf], axis=1)]
+                if out.size:
+                    evicted = self._remove_rows(np.sort(out))
+        row = self._pts.shape[0]
+        self._pts = np.vstack([self._pts, p[None]])
+        self._tags.append(tag)
+        pos = int(np.searchsorted(self._k0s, p[0], side="right"))
+        self._k0s = np.insert(self._k0s, pos, p[0])
+        self._sidx = np.insert(self._sidx, pos, row)
+        return True, evicted
+
+    def _remove_rows(self, rows: np.ndarray) -> list:
+        """Drop front rows (sorted ascending row indices) and remap the
+        sorted view. O(front). Returns the evicted tags."""
+        evicted = [self._tags[r] for r in rows]
+        keep = np.ones(self._pts.shape[0], dtype=bool)
+        keep[rows] = False
+        remap = np.cumsum(keep) - 1       # old row -> new row (kept rows)
+        self._pts = self._pts[keep]
+        self._tags = [t for t, k in zip(self._tags, keep) if k]
+        skeep = keep[self._sidx]
+        self._sidx = remap[self._sidx[skeep]]
+        self._k0s = self._k0s[skeep]
+        return evicted
+
+    def insert_many(self, pts: np.ndarray, tags=None) -> list:
+        """Insert rows in order; returns the accepted tags (in insertion
+        order — note later rows may still evict earlier ones)."""
+        pts = np.atleast_2d(np.asarray(pts, dtype=np.float64))
+        accepted = []
+        for i, p in enumerate(pts):
+            tag = tags[i] if tags is not None else i
+            ok, _ = self.insert(p, tag)
+            if ok:
+                accepted.append(tag)
+        return accepted
 
 
 def pareto_filter(points: np.ndarray) -> np.ndarray:

@@ -176,6 +176,23 @@ def spec_16() -> SystemSpec:
     return SystemSpec(nx=2, ny=4, n_layers=2, n_cpu=2, n_llc=4, n_gpu=10, max_hops=12)
 
 
+# Scale tiers beyond the paper (ROADMAP "scale the design space"): the
+# CPU/LLC/GPU mix keeps the paper's 1:2:5 ratio; max_hops grows with the
+# network diameter (path-walk bound, not a routing constraint).
+def spec_large() -> SystemSpec:
+    """256 tiles: 32 CPUs, 64 LLCs, 160 GPUs in four 8x8 layers — the
+    interactive-speed target of the incremental delta evaluator."""
+    return SystemSpec(nx=8, ny=8, n_layers=4, n_cpu=32, n_llc=64, n_gpu=160,
+                      max_hops=48)
+
+
+def spec_1024() -> SystemSpec:
+    """1024 tiles: 128 CPUs, 256 LLCs, 640 GPUs in four 16x16 layers — the
+    stretch tier; exercises the k-blocked dense path (memory-safe APSP)."""
+    return SystemSpec(nx=16, ny=16, n_layers=4, n_cpu=128, n_llc=256,
+                      n_gpu=640, max_hops=96)
+
+
 @dataclasses.dataclass
 class Design:
     """A candidate design: tile placement + planar link adjacency."""
@@ -224,15 +241,15 @@ def _triu_pairs(n: int) -> tuple[np.ndarray, np.ndarray]:
 
 
 def existing_planar_links(spec: SystemSpec, adj: np.ndarray) -> list[tuple[int, int]]:
-    iu = np.triu_indices(spec.n_tiles, 1)
-    mask = adj[iu]
-    return list(zip(iu[0][mask].tolist(), iu[1][mask].tolist()))
+    iu0, iu1 = _triu_pairs(spec.n_tiles)
+    mask = adj[iu0, iu1]
+    return list(zip(iu0[mask].tolist(), iu1[mask].tolist()))
 
 
 def absent_planar_pairs(spec: SystemSpec, adj: np.ndarray) -> list[tuple[int, int]]:
-    iu = np.triu_indices(spec.n_tiles, 1)
-    ok = spec.planar_pair_mask[iu] & ~adj[iu]
-    return list(zip(iu[0][ok].tolist(), iu[1][ok].tolist()))
+    iu0, iu1 = _triu_pairs(spec.n_tiles)
+    ok = spec.planar_pair_mask[iu0, iu1] & ~adj[iu0, iu1]
+    return list(zip(iu0[ok].tolist(), iu1[ok].tolist()))
 
 
 @dataclasses.dataclass
@@ -344,7 +361,7 @@ def all_neighbors(spec: SystemSpec, d: Design) -> list[Design]:
 def random_design(spec: SystemSpec, rng: np.random.Generator) -> Design:
     """Uniform random valid design (random restart / rand(D) in Alg. 2)."""
     perm = rng.permutation(spec.n_tiles).astype(np.int32)
-    iu = np.triu_indices(spec.n_tiles, 1)
+    iu = _triu_pairs(spec.n_tiles)
     cand = np.flatnonzero(spec.planar_pair_mask[iu])
     pick = rng.choice(cand, size=spec.n_planar_links, replace=False)
     adj = np.zeros((spec.n_tiles, spec.n_tiles), dtype=bool)

@@ -254,6 +254,7 @@ def stage_batch(
     *,
     case: str = "case3",
     backend: str = "auto",
+    delta: str = "auto",
     iters_max: int = 12,
     n_swaps: int = 24,
     n_link_moves: int = 24,
@@ -285,7 +286,10 @@ def stage_batch(
 
     ``max_evals`` bounds the total objective-evaluation budget across all
     chains (checked per lockstep step), making equal-budget comparisons
-    against the single-start driver direct. ``forest_backend`` selects the
+    against the single-start driver direct. ``delta`` is Evaluator's
+    incremental-move-evaluation mode (``"auto"`` enables host table deltas
+    at DELTA_AUTO_MIN_TILES+ tiles, e.g. spec_large; the paper specs keep
+    the dense jitted path). ``forest_backend`` selects the
     shared surrogate's inference backend (core.forest.FOREST_BACKENDS;
     ``None`` keeps the forest's ``"auto"``).
 
@@ -311,7 +315,7 @@ def stage_batch(
     check_meta_backend(meta_backend)
     rng = np.random.default_rng(seed)
     if ev is None:
-        ev = Evaluator(spec, f, backend=backend)
+        ev = Evaluator(spec, f, backend=backend, delta=delta)
     if ctx is None:
         ctx = PhvContext(ev(spec.mesh_design()), CASES[case])
     history = history or SearchHistory(ev, ctx)

@@ -10,7 +10,10 @@ pattern as an MXU matmul k-loop, but on the VPU — min of sums has no MXU
 lowering).
 
 Block sizes keep the (bm, bk, bn) broadcast intermediate within VMEM:
-128 x 32 x 128 x 4 B = 2 MiB.
+128 x 32 x 128 x 4 B = 2 MiB. The grid is therefore already k-blocked and
+memory-safe at the spec_large/spec_1024 tiers (DESIGN.md §13) — no (N, N, N)
+intermediate ever materializes; the jnp fallback gets the same property from
+``routing.min_plus_blocked`` above ``routing.DENSE_NMAX``.
 
 This module is the ``backend="pallas"`` implementation behind
 core.routing.apsp_batched / routing_tables_batched; core.evaluate.Evaluator

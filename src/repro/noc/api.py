@@ -292,6 +292,16 @@ class BudgetedEvaluator:
     def batch(self, designs: list[Design]) -> np.ndarray:
         return self.batch_aux(designs)[0]
 
+    def batch_moves(self, moves) -> np.ndarray:
+        # Must be mirrored here, not left to __getattr__: the raw
+        # evaluator's batch_moves dispatches internally (its delta path
+        # never calls back through this proxy's batch), so delegation
+        # would silently skip the budget check.
+        ms = moves if isinstance(moves, (list, tuple)) else [moves]
+        if any(len(m) for m in ms):
+            self._check()
+        return self._ev.batch_moves(moves)
+
     def __call__(self, d: Design) -> np.ndarray:
         return self.batch([d])[0]
 

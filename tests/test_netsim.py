@@ -159,3 +159,29 @@ def test_fig4_direction_lower_util_higher_throughput():
     n = len(ths)
     rho = 1 - 6 * np.sum((a - b) ** 2) / (n * (n**2 - 1))
     assert rho > 0.0
+
+
+def test_nh_cache_is_byte_bounded(monkeypatch):
+    """The table cache evicts by *bytes*, not just entry count: with a
+    budget that fits one entry, inserting a second evicts the LRU one and
+    the byte counter tracks the survivors exactly."""
+    spec = spec_tiny()
+    netsim.clear_caches()
+    d0 = spec.mesh_design()
+    e0 = netsim._design_tables(spec, d0)
+    assert netsim._nh_cache_nbytes == e0["nbytes"] > 0
+    # Budget = exactly one entry's bytes -> the next insert must evict d0.
+    monkeypatch.setattr(netsim, "_NH_CACHE_MAX_BYTES", e0["nbytes"])
+    d1 = random_design(spec, np.random.default_rng(1))
+    e1 = netsim._design_tables(spec, d1)
+    assert len(netsim._NH_CACHE) == 1
+    assert netsim._nh_cache_nbytes == e1["nbytes"]
+    # The most recent entry always survives, even when it alone exceeds
+    # the budget (the bound never empties the cache).
+    monkeypatch.setattr(netsim, "_NH_CACHE_MAX_BYTES", 0)
+    d2 = random_design(spec, np.random.default_rng(2))
+    e2 = netsim._design_tables(spec, d2)
+    assert len(netsim._NH_CACHE) == 1
+    assert netsim._nh_cache_nbytes == e2["nbytes"]
+    netsim.clear_caches()
+    assert netsim._nh_cache_nbytes == 0 and len(netsim._NH_CACHE) == 0

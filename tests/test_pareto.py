@@ -167,3 +167,80 @@ def test_phv_with_batch_matches_scalar_loop():
     got = ctx.phv_with_batch(np.zeros((0, 5)), mesh[None] * 0.9)
     assert got.shape == (1,)
     assert got[0] == pytest.approx(ctx.phv(mesh[None] * 0.9))
+
+
+# ------------------------------------------------------------- archive
+def test_pareto_mask_signed_zero_dedup():
+    """Regression: -0.0 and 0.0 rows are the same point — exactly one
+    survives (keep-first), not both."""
+    pts = np.array([[0.0, 1.0], [-0.0, 1.0], [1.0, 0.0], [1.0, -0.0]])
+    mask = pareto_mask(pts)
+    assert mask.tolist() == [True, False, True, False]
+
+
+def _archive_reference_front(stream):
+    """Front of an insertion stream per the historical stacked-mask
+    semantics: repeatedly stack survivors + next point, re-mask."""
+    from repro.core.pareto import pareto_mask as pm
+    front = np.zeros((0, stream.shape[1]))
+    tags: list = []
+    for i, p in enumerate(stream):
+        cand = np.vstack([front, p[None]])
+        mask = pm(cand)
+        keep_tags = [t for t, m in zip(tags + [i], mask) if m]
+        front, tags = cand[mask], keep_tags
+    return front, tags
+
+
+def test_archive_matches_stacked_pareto_mask():
+    """ParetoArchive.insert reproduces the stacked pareto_mask semantics
+    byte-for-byte: same surviving rows, same order, same tags."""
+    from repro.core.pareto import ParetoArchive
+
+    rng = np.random.default_rng(17)
+    for k in (2, 3, 4):
+        for trial in range(5):
+            stream = rng.integers(0, 6, size=(60, k)).astype(np.float64)
+            stream[rng.random(60) < 0.1] *= -0.0  # signed-zero rows too
+            arch = ParetoArchive(k)
+            for i, p in enumerate(stream):
+                arch.insert(p, tag=i)
+            ref_front, ref_tags = _archive_reference_front(stream)
+            assert np.array_equal(arch.points, ref_front), (k, trial)
+            assert arch.tags == ref_tags, (k, trial)
+
+
+def test_archive_insert_reports_evictions():
+    from repro.core.pareto import ParetoArchive
+
+    arch = ParetoArchive(2)
+    assert arch.insert([1.0, 3.0], tag="a") == (True, [])
+    assert arch.insert([3.0, 1.0], tag="b") == (True, [])
+    # Dominated / duplicate candidates are rejected.
+    assert arch.insert([2.0, 4.0], tag="c") == (False, [])
+    assert arch.insert([1.0, 3.0], tag="d") == (False, [])
+    assert arch.insert([-0.0 * 1.0 + 1.0, 3.0], tag="d2")[0] is False
+    # A dominator evicts both members.
+    acc, ev = arch.insert([0.5, 0.5], tag="e")
+    assert acc and sorted(ev) == ["a", "b"]
+    assert len(arch) == 1 and arch.tags == ["e"]
+
+
+def test_archive_from_front_roundtrip():
+    from repro.core.pareto import ParetoArchive
+
+    rng = np.random.default_rng(23)
+    stream = rng.integers(0, 8, size=(40, 3)).astype(np.float64)
+    arch = ParetoArchive(3)
+    arch.insert_many(stream)
+    re = ParetoArchive.from_front(arch.points, tags=list(arch.tags))
+    assert np.array_equal(re.points, arch.points)
+    assert re.tags == arch.tags
+    # Seeded archive keeps behaving like the original.
+    p = np.min(stream, axis=0) - 1.0
+    acc1, _ = arch.insert(p)
+    acc2, _ = re.insert(p)
+    assert acc1 and acc2 and np.array_equal(re.points, arch.points)
+    # Empty seed is valid.
+    empty = ParetoArchive.from_front(np.zeros((0, 3)))
+    assert len(empty) == 0 and empty.insert([1.0, 1.0, 1.0])[0]
